@@ -1,0 +1,61 @@
+"""The paper's core systems claim, quantified from compiled artifacts:
+consensus ADMM communicates ONCE per round (K_w local steps) where
+data-parallel SGD communicates every step.
+
+Reads the dry-run records (experiments/dryrun/*.json) and compares
+per-TOKEN collective link bytes of the admm round vs the sgd step for every
+arch that ran both, plus the DCN (pod-crossing) bytes on the multi-pod mesh
+— the boundary that plays the role of the paper's slow star links.
+"""
+import json
+from pathlib import Path
+
+from benchmarks.common import OUT, emit
+
+DRY = OUT / "dryrun"
+
+
+def main():
+    rows = {}
+    for mesh in ("pod", "multipod"):
+        for f in sorted(DRY.glob(f"*__train_4k__{mesh}__admm.json")):
+            rec = json.loads(f.read_text())
+            if rec["status"] != "ok":
+                continue
+            arch = rec["arch"]
+            sgd_f = DRY / f"{arch}__train_4k__{mesh}__sgd.json"
+            if not sgd_f.exists():
+                continue
+            sgd = json.loads(sgd_f.read_text())
+            if sgd["status"] != "ok":
+                continue
+            a_tok = rec["meta"]["tokens"]
+            s_tok = sgd["meta"]["tokens"]
+            a_coll = rec["summary"]["per_chip_link_bytes"] / a_tok
+            s_coll = sgd["summary"]["per_chip_link_bytes"] / s_tok
+            a_dcn = rec["summary"].get("dcn_link_bytes", 0.0) / a_tok
+            s_dcn = sgd["summary"].get("dcn_link_bytes", 0.0) / s_tok
+            rows[f"{arch}@{mesh}"] = {
+                "admm_link_B_per_token": a_coll,
+                "sgd_link_B_per_token": s_coll,
+                "total_ratio_sgd_over_admm": s_coll / a_coll if a_coll else 0,
+                "admm_dcn_B_per_token": a_dcn,
+                "sgd_dcn_B_per_token": s_dcn,
+                "dcn_ratio_sgd_over_admm": (s_dcn / a_dcn) if a_dcn else None,
+            }
+    print(f"{'cell':<34}{'admm B/tok':>12}{'sgd B/tok':>12}{'ratio':>7}"
+          f"{'admm DCN':>12}{'sgd DCN':>12}{'DCN ratio':>10}")
+    for k, v in rows.items():
+        dr = v["dcn_ratio_sgd_over_admm"]
+        print(f"{k:<34}{v['admm_link_B_per_token']:12.0f}"
+              f"{v['sgd_link_B_per_token']:12.0f}"
+              f"{v['total_ratio_sgd_over_admm']:7.2f}"
+              f"{v['admm_dcn_B_per_token']:12.0f}"
+              f"{v['sgd_dcn_B_per_token']:12.0f}"
+              f"{dr if dr is None else round(dr, 2)!s:>10}")
+    emit("bench_admm_vs_sgd", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

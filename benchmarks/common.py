@@ -1,0 +1,22 @@
+"""Shared helpers for the benchmark suite."""
+import json
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments"
+OUT.mkdir(exist_ok=True)
+
+
+def emit(name: str, payload: dict):
+    path = OUT / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=float))
+    print(f"[bench] wrote {path}")
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.time()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat

@@ -1,0 +1,96 @@
+"""Figs. 4/5/9 — speedup & efficiency vs W, utilization, responsiveness.
+
+One W-sweep feeds all three figures (the paper measures them on the same
+runs).  The ADMM math runs for real on a reduced instance; the TIMING model
+uses the PAPER's per-worker shard sizes (N=600k/W samples) through the
+calibrated pool constants, reproducing the paper's anchors:
+  * relative speedup up to W=256 (~17x vs W=4),
+  * efficiency ~74% at W=64, dropping to ~26% at W=256 (scheduler fan-in).
+"""
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.logreg_paper import scaled
+from repro.core.admm import AdmmOptions
+from repro.core.fista import FistaOptions
+from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
+from repro.runtime.scheduler import LogRegProblem
+
+PAPER_N = 600_000
+PAPER_D = 10_000
+
+
+class PaperScaleTiming(LogRegProblem):
+    """Real solves on the reduced shards; timing at paper-scale N_w."""
+
+    def n_samples(self, wid, n_workers):
+        from repro.data.logreg import shard_rows
+        lo, hi = shard_rows(PAPER_N, n_workers, wid)
+        return hi - lo
+
+
+def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0):
+    cfg = scaled(24_000, 500, density=0.02)
+    fi = dict(fixed_inner=50) if uniform else {}
+    prob = PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1), **fi)
+    out = {}
+    for W in ws:
+        sched = Scheduler(prob, SchedulerConfig(
+            n_workers=W, admm=AdmmOptions(max_iters=rounds),
+            iter_smoothing=True,
+            pool=PoolConfig(seed=seed)))
+        t0 = time.time()
+        sched.solve(max_rounds=rounds)
+        hist = sched.history
+        t_round = np.mean([
+            hist[i].sim_time - hist[i - 1].sim_time
+            for i in range(1, len(hist))])
+        out[W] = {
+            "sim_round_s": float(t_round),
+            "comp_mean": float(np.mean([m.t_comp.mean() for m in hist])),
+            "idle_mean": float(np.mean([m.t_idle.mean() for m in hist])),
+            "comp_std": float(np.mean([m.t_comp.std() for m in hist])),
+            "idle_std": float(np.mean([m.t_idle.std() for m in hist])),
+            "slowest10_frac": np.stack(
+                [m.slowest10 for m in hist]).mean(0).tolist(),
+            "wall_s": time.time() - t0,
+        }
+        print(f"  W={W:4d} round={t_round:7.3f}s comp={out[W]['comp_mean']:6.3f}s "
+              f"idle={out[W]['idle_mean']:6.3f}s [{out[W]['wall_s']:.0f}s wall]")
+    return out
+
+
+def main(paper_scale: bool = False):
+    ws = [4, 8, 16, 32, 64, 128, 256] if paper_scale else [4, 8, 16, 32, 64]
+    results = {}
+    for label, uniform in (("nonuniform", False), ("uniform", True)):
+        print(f"[fig4/5/9] {label} load sweep W={ws}")
+        sweep = run_sweep(ws, uniform=uniform)
+        base = sweep[4]["sim_round_s"]
+        for W in ws:
+            s = base / sweep[W]["sim_round_s"]
+            sweep[W]["speedup_vs_4"] = s
+            sweep[W]["efficiency"] = s / (W / 4)
+        results[label] = sweep
+        print("  " + "  ".join(
+            f"W={W}: S={sweep[W]['speedup_vs_4']:.1f} "
+            f"E={sweep[W]['efficiency']:.2f}" for W in ws))
+    emit("fig4_speedup_efficiency", results)
+
+    # paper anchors (only checkable at the full sweep)
+    if paper_scale:
+        e64 = results["nonuniform"][64]["efficiency"]
+        e256 = results["nonuniform"][256]["efficiency"]
+        print(f"[fig4] anchors: E(64)={e64:.2f} (paper 0.74), "
+              f"E(256)={e256:.2f} (paper 0.26)")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="sweep to W=256 (several CPU-minutes)")
+    main(ap.parse_args().paper_scale)

@@ -1,0 +1,27 @@
+"""Fig. 8 — cold start of bulk-spawned workers vs pool size.
+
+Pure pool-simulator study (the paper measured first-contact times after
+API-Gateway bulk spawns through CURL's multi interface): fastest worker is
+flat in W; slowest degrades linearly past W ~ 64 from request queuing.
+"""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.runtime.pool import LambdaPool, PoolConfig
+
+
+def main():
+    rows = {}
+    for W in (4, 8, 16, 32, 64, 128, 256):
+        pool = LambdaPool(PoolConfig(seed=0))
+        workers = pool.spawn_bulk(list(range(W)), at=0.0)
+        cs = np.array([w.cold_start_s for w in workers])
+        rows[W] = {"fastest_s": float(cs.min()), "slowest_s": float(cs.max()),
+                   "mean_s": float(cs.mean())}
+        print(f"  W={W:4d} fastest={cs.min():5.2f}s slowest={cs.max():6.2f}s")
+    emit("fig8_coldstart", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""§Roofline — aggregate the dry-run records into the per-cell table.
+
+Emits experiments/roofline_table.md (the table in EXPERIMENTS.md) and a
+machine-readable summary.  Terms per (arch x shape x mesh x mode):
+  compute   = HLO matmul FLOPs / chip / 197 TF/s (v5e bf16)
+  memory    = HBM traffic est / chip / 819 GB/s
+  collective= ring link bytes / chip / 50 GB/s
+plus the dominant term, MODEL_FLOPS/HLO_FLOPS (useful ratio), and the
+fits-in-HBM estimate from XLA's memory analysis.
+"""
+import json
+from pathlib import Path
+
+from benchmarks.common import OUT, emit
+
+DRY = OUT / "dryrun"
+
+
+def load():
+    recs = []
+    for f in sorted(DRY.glob("*.json")):
+        if f.name == "sweep.log":
+            continue
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def main():
+    recs = [r for r in load() if r.get("status") == "ok"]
+    skipped = [r for r in load() if r.get("status") == "skipped"]
+    lines = [
+        "| arch | shape | mesh | mode | Tc (s) | Tm (s) | Tcoll (s) | "
+        "dominant | useful | fits HBM |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    table = {}
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                         r["mode"])):
+        t = r["roofline"]
+        key = f"{r['arch']}|{r['shape']}|{r['mesh']}|{r['mode']}"
+        table[key] = t
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | "
+            f"{t['t_compute_s']:.3f} | {t['t_memory_s']:.3f} | "
+            f"{t['t_collective_s']:.3f} | {t['dominant']} | "
+            f"{t['useful_flops_ratio']:.2f} | {r['fits_hbm']} |")
+    md = "\n".join(lines)
+    (OUT / "roofline_table.md").write_text(md + "\n")
+    print(f"[roofline] {len(recs)} ok cells, {len(skipped)} designed skips "
+          f"-> experiments/roofline_table.md")
+
+    # worst cells by compute fraction (hillclimb candidates)
+    ranked = sorted(
+        ((t["compute_fraction"], k) for k, t in table.items()))
+    print("[roofline] worst compute-fraction cells:")
+    for frac, k in ranked[:6]:
+        print(f"   {frac:6.3f}  {k}")
+    emit("roofline_summary", {"cells": table,
+                              "n_ok": len(recs), "n_skipped": len(skipped)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+  python -m benchmarks.run              # default (CPU-minutes) pass
+  python -m benchmarks.run --paper      # full-scale variants (slower)
+
+Emits CSV to stdout (name,seconds,key=value ...) and JSON artifacts under
+experiments/.
+"""
+import argparse
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full-scale variants (W=256 sweeps, full fig3)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_admm_vs_sgd, bench_compression,
+                            bench_kernels, fig3_convergence, fig4_speedup,
+                            fig67_histograms, fig8_coldstart, roofline)
+
+    jobs = [
+        ("kernels", lambda: bench_kernels.main()),
+        ("fig8_coldstart", lambda: fig8_coldstart.main()),
+        ("fig3_convergence", lambda: fig3_convergence.main(full=args.paper)),
+        ("fig4_speedup", lambda: fig4_speedup.main(paper_scale=args.paper)),
+        ("fig67_histograms", lambda: fig67_histograms.main(big=args.paper)),
+        ("compression", lambda: bench_compression.main()),
+        ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),
+        ("roofline", lambda: roofline.main()),
+    ]
+    print("name,seconds,status")
+    failures = 0
+    for name, fn in jobs:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            print(f"== {name} ==")
+            fn()
+            print(f"{name},{time.time()-t0:.1f},ok")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},{time.time()-t0:.1f},FAILED:{type(e).__name__}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

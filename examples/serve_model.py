@@ -1,0 +1,20 @@
+"""Serve a model from the zoo with batched requests (prefill + decode).
+
+Demonstrates the serving path the dry-run lowers at production shape: a
+batched prefill fills the KV/state cache, then greedy decode steps stream
+tokens.  Works for every family — try an SSM (O(1)-state decode):
+
+Run:  PYTHONPATH=src python examples/serve_model.py
+      PYTHONPATH=src python examples/serve_model.py --arch rwkv6_1_6b
+"""
+import sys
+
+from repro.launch import serve as serve_cli
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "mixtral_8x7b"] + argv
+    if not any(a.startswith("--batch") for a in argv):
+        argv += ["--batch", "4", "--prompt-len", "48", "--gen-len", "16"]
+    serve_cli.main(argv)

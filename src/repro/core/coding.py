@@ -1,0 +1,94 @@
+"""Straggler-robust aggregation: gradient coding (Tandon et al., ICML'17).
+
+The paper's outlook (§V-A) notes that simply discarding the slowest workers
+"will result in a suboptimal solution" for generic optimization and points
+at coded optimization as the fix.  Gradient coding assigns each data shard
+to r = s+1 workers so the master reconstructs the EXACT sum of shard
+gradients from any W - s responses.
+
+Two published schemes:
+
+* **Fraction Repetition (FRS)** — workers form W/r groups; every worker in
+  group g holds the same r shards; decoding picks one responder per group
+  with coefficient 1.  Requires r | W; tolerates any s = r-1 stragglers.
+* **Cyclic repetition** — worker w holds shards {w, w+1, ..., w+r-1 (mod
+  W)} with coefficients from the nullspace construction; decoding solves a
+  small linear system  a^T B = 1^T  restricted to the responders (exact
+  for any s = r-1 stragglers; we solve it with lstsq at runtime).
+
+Both are exposed as (B matrix, encode, decode) so the runtime scheduler and
+the property tests share one implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def frs_matrix(n_workers: int, r: int) -> np.ndarray:
+    """B (W, K=W shards): FRS assignment/coefficients, r-fold replication."""
+    if n_workers % r:
+        raise ValueError(f"FRS needs r | W (got W={n_workers}, r={r})")
+    B = np.zeros((n_workers, n_workers), np.float32)
+    n_groups = n_workers // r
+    for g in range(n_groups):
+        shards = [g * r + j for j in range(r)]
+        for j in range(r):
+            w = g * r + j
+            B[w, shards] = 1.0
+    return B
+
+
+def cyclic_matrix(n_workers: int, r: int) -> np.ndarray:
+    """B (W, W): Tandon et al. Algorithm 2 (cyclic repetition scheme).
+
+    Worker w covers shards {w, ..., w+s mod W} (s = r-1) with coefficients
+    chosen so 1^T lies in the span of ANY W-s rows: construct a random
+    H (s, W) whose columns sum to zero, then pick each row's coefficients
+    in the null space of the corresponding H columns."""
+    W, s = n_workers, r - 1
+    if s == 0:
+        return np.eye(W, dtype=np.float32)
+    rng = np.random.RandomState(0)
+    H = rng.randn(s, W)
+    H[:, -1] = -H[:, :-1].sum(axis=1)          # columns sum to zero
+    B = np.zeros((W, W))
+    for i in range(W):
+        cols = [(i + j) % W for j in range(r)]
+        B[i, cols[0]] = 1.0
+        # solve H[:, cols[1:]] @ x = -H[:, cols[0]]  (s x s system)
+        x = np.linalg.solve(H[:, cols[1:]], -H[:, cols[0]])
+        B[i, cols[1:]] = x
+    return B.astype(np.float32)
+
+
+def encode(B: np.ndarray, shard_grads: jnp.ndarray) -> jnp.ndarray:
+    """Worker messages: m_w = sum_k B[w,k] * g_k.  shard_grads (K, d)."""
+    return jnp.asarray(B) @ shard_grads
+
+
+def decode_coeffs(B: np.ndarray, responders: np.ndarray) -> np.ndarray:
+    """a (|responders|,) with  a^T B[responders] = 1^T  (exact sum).
+
+    FRS: closed form (one representative per group).  General B: lstsq.
+    Raises if the responder set cannot reconstruct (too many stragglers).
+    """
+    Bs = B[responders]                                   # (R, K)
+    ones = np.ones(B.shape[1], np.float32)
+    a, *_ = np.linalg.lstsq(Bs.T, ones, rcond=None)
+    if not np.allclose(Bs.T @ a, ones, atol=1e-4):
+        raise ValueError("responder set cannot reconstruct the exact sum "
+                         f"({len(responders)}/{B.shape[0]} responders)")
+    return a.astype(np.float32)
+
+
+def decode(B: np.ndarray, responders: np.ndarray,
+           messages: jnp.ndarray) -> jnp.ndarray:
+    """Exact sum of ALL shard gradients from responder messages (R, d)."""
+    a = decode_coeffs(B, responders)
+    return jnp.asarray(a) @ messages
+
+
+def max_stragglers(r: int) -> int:
+    return r - 1

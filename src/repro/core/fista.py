@@ -1,0 +1,132 @@
+"""FISTA with backtracking (Beck & Teboulle '09) — the paper's local solver.
+
+Solves ``min_x F(x)`` for a smooth F given by a ``value_and_grad`` callable
+(for the ADMM worker subproblem, F is the local loss plus the augmented
+quadratic; the non-smooth h lives at the master, so the prox step degenerates
+to a gradient step).  Fully jittable: the outer iteration is a
+``lax.while_loop``, the backtracking line search a bounded inner loop.
+
+Termination follows Section III of the paper:
+  * run at least ``min_iters`` (K_w) iterations,
+  * stop when ||grad|| <= eps_g  OR  (F_{k-1} - F_k)/F_{k-1} <= eps_f,
+  * hard cap at ``max_iters``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FistaOptions:
+    min_iters: int = 1            # K_w in the paper
+    max_iters: int = 500
+    eps_grad: float = 1e-2        # eps_g
+    eps_fval: float = 1e-12       # eps_f (relative improvement)
+    l0: float = 1.0               # initial Lipschitz estimate
+    eta: float = 2.0              # backtracking multiplier
+    max_backtracks: int = 30
+
+
+class FistaState(NamedTuple):
+    x: jnp.ndarray                # current iterate
+    y: jnp.ndarray                # extrapolated point
+    t: jnp.ndarray                # momentum scalar
+    lip: jnp.ndarray              # current Lipschitz estimate
+    f_x: jnp.ndarray              # F(x)
+    g_norm: jnp.ndarray           # ||grad F(y)|| of last step
+    rel_impr: jnp.ndarray         # last relative improvement
+    k: jnp.ndarray                # iteration counter
+
+
+def _backtrack(vg: Callable, y, f_y, g_y, lip, opts: FistaOptions):
+    """Find L (by eta-doubling) with F(y - g/L) <= F(y) - ||g||^2/(2L)."""
+    gsq = jnp.vdot(g_y, g_y).real
+
+    def cond(carry):
+        lip, j, ok = carry
+        return jnp.logical_and(~ok, j < opts.max_backtracks)
+
+    def body(carry):
+        lip, j, _ = carry
+        x_try = y - g_y / lip
+        f_try, _ = vg(x_try)
+        ok = f_try <= f_y - 0.5 * gsq / lip + 1e-12 * jnp.abs(f_y)
+        lip_next = jnp.where(ok, lip, lip * opts.eta)
+        return (lip_next, j + 1, ok)
+
+    lip, _, _ = jax.lax.while_loop(cond, body, (lip, jnp.int32(0), jnp.asarray(False)))
+    return lip
+
+
+def fista(
+    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    x0: jnp.ndarray,
+    opts: FistaOptions = FistaOptions(),
+) -> Tuple[jnp.ndarray, FistaState]:
+    """Minimise F from ``value_and_grad``; returns (x*, final state)."""
+    f0, _ = value_and_grad(x0)
+    ft = f0.dtype
+    init = FistaState(
+        x=x0, y=x0, t=jnp.asarray(1.0, ft), lip=jnp.asarray(opts.l0, ft),
+        f_x=f0, g_norm=jnp.asarray(jnp.inf, ft),
+        rel_impr=jnp.asarray(jnp.inf, ft), k=jnp.int32(0))
+
+    def cond(st: FistaState):
+        not_min = st.k < opts.min_iters
+        under_max = st.k < opts.max_iters
+        grad_big = st.g_norm > opts.eps_grad
+        impr_big = st.rel_impr > opts.eps_fval
+        return jnp.logical_and(under_max,
+                               jnp.logical_or(not_min,
+                                              jnp.logical_and(grad_big, impr_big)))
+
+    def body(st: FistaState):
+        f_y, g_y = value_and_grad(st.y)
+        lip = _backtrack(value_and_grad, st.y, f_y, g_y, st.lip, opts)
+        x_new = st.y - g_y / lip
+        f_new, _ = value_and_grad(x_new)
+        # monotone safeguard (MFISTA-lite): never accept an increase over x_k
+        worse = f_new > st.f_x
+        x_new = jnp.where(worse, st.x, x_new)
+        f_new = jnp.where(worse, st.f_x, f_new)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * st.t * st.t))
+        y_new = x_new + ((st.t - 1.0) / t_new) * (x_new - st.x)
+        rel = (st.f_x - f_new) / jnp.maximum(jnp.abs(st.f_x), 1e-30)
+        return FistaState(
+            x=x_new, y=y_new, t=t_new, lip=lip, f_x=f_new,
+            g_norm=jnp.linalg.norm(g_y), rel_impr=rel, k=st.k + 1)
+
+    final = jax.lax.while_loop(cond, body, init)
+    return final.x, final
+
+
+def fista_fixed(value_and_grad, x0, n_iters: int, opts: FistaOptions = FistaOptions()):
+    """Fixed-iteration-count FISTA (scan) — used when a static trip count is
+    needed (e.g. inside vmapped workers during the dry-run)."""
+    def body(st: FistaState, _):
+        f_y, g_y = value_and_grad(st.y)
+        lip = _backtrack(value_and_grad, st.y, f_y, g_y, st.lip, opts)
+        x_new = st.y - g_y / lip
+        f_new, _ = value_and_grad(x_new)
+        worse = f_new > st.f_x
+        x_new = jnp.where(worse, st.x, x_new)
+        f_new = jnp.where(worse, st.f_x, f_new)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * st.t * st.t))
+        y_new = x_new + ((st.t - 1.0) / t_new) * (x_new - st.x)
+        rel = (st.f_x - f_new) / jnp.maximum(jnp.abs(st.f_x), 1e-30)
+        return FistaState(x=x_new, y=y_new, t=t_new, lip=lip, f_x=f_new,
+                          g_norm=jnp.linalg.norm(g_y), rel_impr=rel,
+                          k=st.k + 1), None
+
+    f0, _ = value_and_grad(x0)
+    ft = f0.dtype
+    init = FistaState(x=x0, y=x0, t=jnp.asarray(1.0, ft),
+                      lip=jnp.asarray(opts.l0, ft), f_x=f0,
+                      g_norm=jnp.asarray(jnp.inf, ft),
+                      rel_impr=jnp.asarray(jnp.inf, ft), k=jnp.int32(0))
+    final, _ = jax.lax.scan(body, init, None, length=n_iters)
+    return final.x, final

@@ -1,0 +1,80 @@
+"""Synthetic LM token pipeline: deterministic, shardable, stateless.
+
+Follows the paper's data discipline (Section II-A): the scheduler never
+holds data — every worker regenerates its shard as a pure function of
+(seed, global step, shard index).  On a pod that means the input pipeline
+needs no host-side distribution layer and elastic rescaling moves no data
+(DESIGN.md §2).
+
+Tokens are drawn from a Zipfian distribution (vocabulary rank-frequency,
+much closer to text than uniform for testing top-k/vocab-sharded paths)
+and labels are next-token shifted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    seed: int = 0
+    zipf_a: float = 1.2          # Zipf exponent
+
+
+def _zipf_tokens(key, shape, vocab: int, a: float) -> jnp.ndarray:
+    """Zipf-ish sampling via inverse-CDF on uniform (approximate, O(1))."""
+    u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0)
+    # inverse of CDF ~ rank^{1-a}: rank = u^{1/(1-a)} over [1, V]
+    r = jnp.power(u, 1.0 / (1.0 - a))
+    r = jnp.clip(r, 1.0, float(vocab))
+    return (r - 1.0).astype(jnp.int32)
+
+
+def batch_for(cfg: ModelConfig, shape: ShapeConfig, step: int,
+              dcfg: LMDataConfig = LMDataConfig(),
+              *, batch_override: Optional[int] = None,
+              seq_override: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """One global batch for (arch, shape, step) — pure function."""
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    if shape.kind == "decode":
+        S = 1
+    key = jax.random.fold_in(jax.random.PRNGKey(dcfg.seed), step)
+    batch: Dict[str, jnp.ndarray] = {}
+    if cfg.family == "audio":
+        batch["embeds"] = (jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.float32) * 0.02).astype(
+                jnp.dtype(cfg.dtype))
+    else:
+        toks = _zipf_tokens(key, (B, S + 1), cfg.vocab_size, dcfg.zipf_a)
+        batch["tokens"] = toks[:, :S]
+        if shape.kind == "train":
+            batch["labels"] = toks[:, 1:]
+    if cfg.family == "vlm":
+        batch["img_embeds"] = (jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_img_tokens, cfg.d_model),
+            jnp.float32) * 0.02).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "audio" and shape.kind == "train":
+        batch["labels"] = _zipf_tokens(jax.random.fold_in(key, 2), (B, S),
+                                       cfg.vocab_size, dcfg.zipf_a)
+    if shape.kind == "decode":
+        batch["positions"] = jnp.zeros((B,), jnp.int32)
+    return batch
+
+
+def worker_batch(cfg: ModelConfig, shape: ShapeConfig, step: int, w: int,
+                 n_workers: int, dcfg: LMDataConfig = LMDataConfig()
+                 ) -> Dict[str, jnp.ndarray]:
+    """Worker w's slice of the global batch — regenerable by any replacement
+    worker (same (seed, step, w) -> same data)."""
+    full = batch_for(cfg, shape, step, dcfg)
+    B = shape.global_batch
+    per = B // n_workers
+    lo = w * per
+    return {k: v[lo:lo + per] for k, v in full.items()}

@@ -1,0 +1,108 @@
+"""Single-token GQA decode attention Pallas TPU kernel.
+
+One new query token per sequence attends to a (possibly ring) KV cache.
+Grid is (B, KV, n_s_blocks) with the cache-slot axis innermost; the G query
+heads sharing a KV head form the rows of a (G, hd) q tile, so each K/V tile
+is streamed from HBM once per (batch, kv-head).  Decode is memory-bound —
+the kernel's only job is to touch the cache exactly once, masked by the
+per-sequence valid length.
+
+Validity: slot c is live iff c <= position[b] — correct for both linear and
+ring caches (ring slots are all valid once position >= Smax and softmax is
+order-independent over slots).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, block_s: int, n_s: int, s_max: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]                                  # scalar int32
+    s_lo = j * block_s
+    ring_full = pos >= s_max                          # ring cache: all valid
+    live = jnp.logical_or(ring_full, s_lo <= pos)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0]                               # (G, hd)
+        k = k_ref[0, 0]                               # (block_s, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                 # (G, block_s)
+        slot = s_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = jnp.logical_or(ring_full, slot <= pos)
+        s = jnp.where(valid, s, -jnp.inf)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        m_safe = jnp.maximum(m_new, NEG_INF)
+        p = jnp.exp(s - m_safe)
+        alpha = jnp.exp(jnp.maximum(m_prev, NEG_INF) - m_safe)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_s - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jnp.ndarray,                   # (B, KV, G, hd)
+    k_cache: jnp.ndarray,             # (B, KV, Smax, hd)
+    v_cache: jnp.ndarray,             # (B, KV, Smax, hd)
+    positions: jnp.ndarray,           # (B,) int32
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, KV, G, hd = q.shape
+    Smax = k_cache.shape[2]
+    bs = min(block_s, Smax)
+    while Smax % bs:
+        bs -= 1
+    n_s = Smax // bs
+    scale = hd ** -0.5
+
+    kern = functools.partial(_kernel, scale=scale, block_s=bs, n_s=n_s,
+                             s_max=Smax)
+    return pl.pallas_call(
+        kern,
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(positions, q, k_cache, v_cache)

@@ -1,0 +1,129 @@
+"""Flash-attention forward Pallas TPU kernel (causal, GQA, sliding window).
+
+Online-softmax over KV tiles with the accumulator resident in VMEM scratch.
+Grid is (B * KV, n_qrow_blocks, n_kv_blocks) with the KV axis innermost so
+the (acc, m, l) scratch carries across KV steps of one (head, q-block).
+Fully-masked tiles (above the causal diagonal, or outside the sliding
+window) are skipped with ``pl.when`` — the MXU work performed matches the
+valid-block FLOP count of the jnp oracle (models/attention.block_attention).
+
+GQA layout: queries are passed as (B*KV, G*S, hd) — the G query heads of one
+KV head are stacked along the row axis (G-major), so each grid row streams
+its K/V tile exactly once for all G query heads; K/V are never materialised
+repeated.  Because S % block_q == 0, every q-block lies within a single
+query head and its in-sequence position is simply ``row % S``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale: float, causal: bool, window, block_q: int,
+            block_kv: int, n_kv: int, seq_q: int):
+    i = pl.program_id(1)              # q-row block
+    j = pl.program_id(2)              # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = (i * block_q) % seq_q      # in-sequence position of the block
+    k_lo = j * block_kv
+
+    live = jnp.asarray(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + block_kv - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0]                                  # (block_q, hd)
+        k = k_ref[0]                                  # (block_kv, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                 # (block_q, block_kv)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if causal:
+            s = jnp.where(qpos >= kpos, s, -jnp.inf)
+        if window is not None:
+            s = jnp.where(kpos > qpos - window, s, -jnp.inf)
+
+        m_prev = m_ref[...]                           # (block_q, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        m_safe = jnp.maximum(m_new, NEG_INF)
+        p = jnp.exp(s - m_safe)
+        alpha = jnp.exp(jnp.maximum(m_prev, NEG_INF) - m_safe)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,                   # (B*KV, G*S, hd)
+    k: jnp.ndarray,                   # (B*KV, Skv, hd)
+    v: jnp.ndarray,                   # (B*KV, Skv, hd)
+    *,
+    seq_q: int,                       # S (per query head)
+    causal: bool = True,
+    window=None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BKV, GS, hd = q.shape
+    Skv = k.shape[1]
+    assert GS % seq_q == 0
+    bq = min(block_q, seq_q)
+    while seq_q % bq:
+        bq -= 1
+    bkv = min(block_kv, Skv)
+    while Skv % bkv:
+        bkv -= 1
+    n_qrows = GS // bq
+    n_kv = Skv // bkv
+    scale = hd ** -0.5
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_kv=bkv, n_kv=n_kv, seq_q=seq_q)
+
+    return pl.pallas_call(
+        kern,
+        grid=(BKV, n_qrows, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, GS, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

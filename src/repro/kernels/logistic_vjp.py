@@ -1,0 +1,87 @@
+"""Fused logistic loss+gradient Pallas TPU kernel.
+
+The ADMM worker's inner-loop hot spot is the FISTA gradient evaluation
+  f(x)    = sum_n log(1 + exp(-b_n <a_n, x>))
+  grad(x) = A^T (-b * sigmoid(-b Ax))
+which naively is two full passes over A (one for Ax, one for A^T c).  This
+kernel fuses both into ONE pass: for each row tile of A held in VMEM it
+computes the margins (MXU matvec), the loss partial and the coefficient
+vector (VPU transcendentals), and immediately applies the transposed-tile
+matvec for the gradient contribution — so A is streamed from HBM exactly
+once per FISTA iteration.  Loss and gradient accumulate in VMEM across the
+(sequential) row-tile grid.
+
+TPU adaptation (DESIGN.md §7): the paper's CSR-sparse rows (p=0.001) become
+dense VMEM tiles — gather/scatter on the sparse structure would idle the MXU;
+dense row tiles of the d<=~12k feature dim fit VMEM comfortably.
+
+Padding contract (handled by ops.fused_logistic_vjp): rows are padded with
+mask=0 (excluded from loss and grad), the feature dim with zero columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. 256 rows x 10112 padded features x 4B = ~10.4 MB VMEM.
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _kernel(a_ref, b_ref, mask_ref, x_ref, loss_ref, grad_ref):
+    i = pl.program_id(0)
+
+    a = a_ref[...]                                   # (TN, D)
+    b = b_ref[...]                                   # (TN, 1)
+    mask = mask_ref[...]                             # (TN, 1)
+    x = x_ref[...]                                   # (1, D)
+
+    # margins m_n = -b_n <a_n, x>   (MXU: (TN,D) @ (D,1))
+    ax = jax.lax.dot_general(a, x.T, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (TN,1)
+    m = -b * ax
+    # loss partial: sum mask * log1p(exp(m)), stable via logaddexp
+    loss_part = jnp.sum(mask * jnp.logaddexp(0.0, m))
+    # coefficients c_n = -b_n * sigmoid(m_n), masked
+    c = mask * (-b) * jax.nn.sigmoid(m)              # (TN,1)
+    # gradient partial: A^T c  (MXU: (D,TN) @ (TN,1) -> do (1,TN)@(TN,D))
+    gpart = jax.lax.dot_general(c.T, a, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1,D)
+
+    @pl.when(i == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    loss_ref[...] += loss_part.reshape(1, 1)
+    grad_ref[...] += gpart
+
+
+def logistic_vjp_pallas(a, b, mask, x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                        interpret: bool = False):
+    """a (N, D), b (N, 1), mask (N, 1), x (1, D); N % block_rows == 0,
+    D % 128 == 0.  Returns (loss (1,1) f32, grad (1,D) f32)."""
+    N, D = a.shape
+    assert N % block_rows == 0 and D % 128 == 0, (N, D)
+    grid = (N // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, mask, x)

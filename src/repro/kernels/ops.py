@@ -1,0 +1,163 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: the Pallas path compiles only for TPU backends.  On this
+CPU container the wrappers run the kernels in ``interpret=True`` mode when
+``REPRO_PALLAS=interpret`` is set (used by the kernel test-suite), and fall
+back to the jnp oracle otherwise — so model code can call these
+unconditionally and the dry-run (CPU lowering) never tries to lower Mosaic.
+
+Padding/layout glue lives here so the kernels keep hardware-aligned shapes:
+rows to the row-tile multiple, features to the 128-lane multiple, GQA
+reshapes for attention.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as dec_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import logistic_vjp as lv_k
+from repro.kernels import ref
+from repro.kernels import soft_threshold as st_k
+
+
+def _mode() -> str:
+    """'pallas' (TPU), 'interpret' (forced), or 'ref' (CPU default)."""
+    env = os.environ.get("REPRO_PALLAS", "")
+    if env in ("interpret", "ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# fused logistic value+grad
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "mode"))
+def _logistic_impl(A, b, x, *, block_rows, mode):
+    N, D = A.shape
+    Np = _round_up(N, block_rows)
+    Dp = _round_up(D, 128)
+    a_p = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(A)
+    b_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(b)
+    mask = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(1.0)
+    x_p = jnp.zeros((1, Dp), jnp.float32).at[0, :D].set(x)
+    if mode == "ref":
+        loss, grad = ref.logistic_vjp_ref(a_p, b_p, mask, x_p)
+    else:
+        loss, grad = lv_k.logistic_vjp_pallas(
+            a_p, b_p, mask, x_p, block_rows=block_rows,
+            interpret=(mode == "interpret"))
+    return loss[0, 0], grad[0, :D]
+
+
+def fused_logistic_vjp(A, b, x, *, block_rows: int = lv_k.DEFAULT_BLOCK_ROWS):
+    """Single-pass loss+grad of sum_n log1p(exp(-b_n <a_n, x>)).
+
+    A (N, D) f32, b (N,) ±1, x (D,).  Returns (loss scalar, grad (D,))."""
+    return _logistic_impl(A, b, x, block_rows=block_rows, mode=_mode())
+
+
+def logistic_value_and_grad(A, b):
+    """Drop-in replacement for data.logreg.logistic_value_and_grad that
+    routes through the fused kernel."""
+    def vg(x):
+        return fused_logistic_vjp(A, b, x)
+    return vg
+
+
+# ---------------------------------------------------------------------------
+# fused soft-threshold z-update
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _softthr_impl(omega, z_old, thr, *, mode):
+    D = omega.shape[0]
+    Dp = _round_up(D, 128)
+    o_p = jnp.zeros((1, Dp), jnp.float32).at[0, :D].set(omega)
+    z_p = jnp.zeros((1, Dp), jnp.float32).at[0, :D].set(z_old)
+    t = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    if mode == "ref":
+        z_new, ssq, nnz = ref.soft_threshold_ref(o_p, z_p, t)
+    else:
+        z_new, ssq, nnz = st_k.soft_threshold_pallas(
+            o_p, z_p, t, interpret=(mode == "interpret"))
+    return z_new[0, :D], ssq[0, 0], nnz[0, 0]
+
+
+def fused_z_update(omega_bar, z_old, thr):
+    """z_new = S(omega_bar; thr); also returns ||z_new - z_old||^2 and nnz.
+
+    omega_bar, z_old (D,); thr scalar.  One HBM pass on TPU."""
+    return _softthr_impl(omega_bar, z_old, thr, mode=_mode())
+
+
+# ---------------------------------------------------------------------------
+# flash attention (train/prefill)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_kv",
+                                    "mode"))
+def _flash_impl(q, k, v, *, causal, window, block_q, block_kv, mode):
+    B, S, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if mode == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    # (B,S,H,hd) -> (B,KV,G,S,hd) -> (B*KV, G*S, hd)
+    qr = (q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(B * KV, G * S, hd))
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    o = fa_k.flash_attention_pallas(
+        qr, kr, vr, seq_q=S, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv,
+        interpret=(mode == "interpret"))
+    return (o.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(B, S, H, hd))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 512, block_kv: int = 512):
+    """q (B,S,H,hd), k/v (B,Skv,KV,hd) -> (B,S,H,hd)."""
+    return _flash_impl(q, k, v, causal=causal, window=window,
+                       block_q=block_q, block_kv=block_kv, mode=_mode())
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one token vs KV cache)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "mode"))
+def _decode_impl(q, k_cache, v_cache, positions, *, block_s, mode):
+    B, _, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    if mode == "ref":
+        return ref.decode_attention_ref(q, k_cache, v_cache, positions)
+    qr = q.reshape(B, KV, G, hd)
+    kr = k_cache.transpose(0, 2, 1, 3)                # (B,KV,Smax,hd)
+    vr = v_cache.transpose(0, 2, 1, 3)
+    o = dec_k.decode_attention_pallas(
+        qr, kr, vr, positions.astype(jnp.int32), block_s=block_s,
+        interpret=(mode == "interpret"))
+    return o.reshape(B, 1, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, positions, *, block_s: int = 512):
+    """q (B,1,H,hd), caches (B,Smax,KV,hd), positions (B,) -> (B,1,H,hd)."""
+    return _decode_impl(q, k_cache, v_cache, positions, block_s=block_s,
+                        mode=_mode())

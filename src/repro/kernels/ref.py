@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prox as prox_mod
+from repro.models import attention as attn_mod
+
+
+def logistic_vjp_ref(a, b, mask, x):
+    """a (N,D), b (N,1), mask (N,1), x (1,D) -> (loss (1,1), grad (1,D))."""
+    m = -b * (a @ x.T)                                # (N,1)
+    loss = jnp.sum(mask * jnp.logaddexp(0.0, m))
+    c = mask * (-b) * jax.nn.sigmoid(m)               # (N,1)
+    grad = c.T @ a                                    # (1,D)
+    return loss.reshape(1, 1), grad
+
+
+def soft_threshold_ref(omega, z_old, thr):
+    """omega, z_old (1,D), thr (1,1) -> (z_new, ssq (1,1), nnz (1,1))."""
+    z_new = prox_mod.soft_threshold(omega, thr[0, 0])
+    diff = z_new - z_old
+    ssq = jnp.sum(diff * diff).reshape(1, 1)
+    nnz = jnp.sum((z_new != 0.0).astype(jnp.float32)).reshape(1, 1)
+    return z_new, ssq, nnz
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q (B,S,H,hd), k/v (B,Skv,KV,hd) -> (B,S,H,hd).  Naive oracle."""
+    return attn_mod.naive_attention(q, k, v, causal=causal, window=window)
+
+
+def decode_attention_ref(q, k_cache, v_cache, positions):
+    """q (B,1,H,hd), caches (B,Smax,KV,hd), positions (B,) -> (B,1,H,hd)."""
+    return attn_mod.decode_attention(q, k_cache, v_cache, positions)

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh × mode).
+
+The two lines above MUST run before any other import — jax locks the device
+count on first initialisation.  512 placeholder host devices back both the
+single-pod (16,16) and the multi-pod (2,16,16) production meshes.
+
+For every cell this driver:
+  1. builds the sharded step (repro.launch.steps.build_step),
+  2. ``.lower().compile()`` — success proves the distribution config is
+     coherent (shardings consistent, collectives supported, shapes divide),
+  3. prints ``compiled.memory_analysis()`` (fits-in-HBM evidence) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. extracts per-chip collective link bytes from the post-SPMD HLO
+     (repro.launch.hlo_analysis) and derives the three roofline terms,
+  5. appends a JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # full 40-cell matrix
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import (ARCH_IDS, LM_SHAPES, cell_is_applicable,
+                           get_config, get_shape)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (HBM_PER_CHIP, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.steps import build_step, default_modes, lower_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def roofline_terms(summary: dict, cfg, meta: dict) -> dict:
+    t_compute = summary["flops_per_chip"] / PEAK_FLOPS_BF16
+    t_memory = summary["bytes_per_chip"] / HBM_BW
+    t_coll = summary["per_chip_link_bytes"] / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    # MODEL_FLOPS: 6·N·D for a train step over D tokens (3 fwd-equivalents);
+    # 2·N_active·D for inference (fwd only)
+    n_active = cfg.active_param_count()
+    tokens = meta.get("tokens", 0)
+    if meta["mode"] in ("sgd", "admm"):
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    hlo_total = summary["flops_per_chip"] * meta["n_chips"]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_bound_s": max(t_compute, t_memory, t_coll),
+        "compute_fraction": (t_compute / max(t_compute, t_memory, t_coll)
+                             if max(t_compute, t_memory, t_coll) else 0.0),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, mode: str,
+             *, verbose: bool = True, save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    n_chips = mesh.devices.size
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
+        "n_chips": n_chips, "status": "",
+    }
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return _finish(record, save, verbose)
+
+    bundle = build_step(cfg, shape, mesh, mode)
+    if bundle is None:
+        record.update(status="skipped",
+                      reason="mode inapplicable on this mesh (DESIGN.md §4)")
+        return _finish(record, save, verbose)
+
+    t0 = time.time()
+    try:
+        lowered = lower_step(bundle, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        return _finish(record, save, verbose)
+
+    summary = hlo_analysis.cost_summary(compiled)
+    meta = dict(bundle.meta, n_chips=n_chips)
+    terms = roofline_terms(summary, cfg, meta)
+    fits = summary["peak_bytes_est"] <= HBM_PER_CHIP
+    record.update(status="ok", lower_s=round(t_lower, 1),
+                  compile_s=round(t_compile, 1), fits_hbm=fits,
+                  meta=bundle.meta, summary=summary, roofline=terms)
+    if verbose:
+        print(f"--- {arch} x {shape_name} x {mesh_name} x {mode} "
+              f"({n_chips} chips)")
+        print("memory_analysis:", compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+        print("collectives: %.3e link-B/chip over %d ops %s" % (
+            summary["per_chip_link_bytes"], summary["n_collective_ops"],
+            summary["by_type"]))
+        print("roofline: compute=%.4fs memory=%.4fs collective=%.4fs "
+              "dominant=%s useful=%.2f fits_hbm=%s" % (
+                  terms["t_compute_s"], terms["t_memory_s"],
+                  terms["t_collective_s"], terms["dominant"],
+                  terms["useful_flops_ratio"], fits))
+    return _finish(record, save, verbose=False)
+
+
+def _finish(record: dict, save: bool, verbose: bool) -> dict:
+    if verbose:
+        print(f"--- {record['arch']} x {record['shape']} x {record['mesh']} "
+              f"x {record['mode']}: {record['status']} "
+              f"{record.get('reason', record.get('error', ''))}")
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        name = "{arch}__{shape}__{mesh}__{mode}.json".format(**record)
+        (OUT_DIR / name).write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", default=None, choices=("pod", "multipod"),
+                    help="default: both")
+    ap.add_argument("--mode", default=None,
+                    choices=("sgd", "admm", "prefill", "decode"),
+                    help="default: every mode the shape supports")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON record already exists")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            modes = ([args.mode] if args.mode
+                     else default_modes(get_shape(shape_name)))
+            for mesh_name in meshes:
+                for mode in modes:
+                    out = OUT_DIR / (f"{arch}__{shape_name}__{mesh_name}"
+                                     f"__{mode}.json")
+                    if args.skip_existing and out.exists():
+                        continue
+                    rec = run_cell(arch, shape_name, mesh_name, mode,
+                                   save=not args.no_save)
+                    n_ok += rec["status"] == "ok"
+                    n_skip += rec["status"] == "skipped"
+                    n_err += rec["status"] == "error"
+    print(f"\n== dry-run done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,462 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits every
+instruction ONCE — a ``lax.scan`` over 48 layers reports 1/48th of the real
+FLOPs (probe-verified).  Since every model here scans its layer stack, we
+walk the HLO text ourselves:
+
+* the module is split into computations (defs precede uses, ENTRY last);
+* per computation, a symbol table maps instruction names to shapes, and
+  - ``dot`` contributes 2 * |result| * prod(lhs contracting dims) FLOPs
+    (matmul FLOPs — the MFU numerator; elementwise FLOPs are ignored),
+  - every non-free instruction contributes operand + result bytes (the
+    fusion-boundary HBM-traffic model HloCostAnalysis itself uses),
+  - collectives contribute per-chip link bytes under ring-algorithm costs:
+      all-reduce          2 * T * (n-1)/n     (T = per-participant tensor)
+      all-gather          T_full * (n-1)/n
+      reduce-scatter      T_shard * (n-1)
+      all-to-all          T * (n-1)/n
+      collective-permute  T
+    with n parsed from ``replica_groups``;
+* ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` for
+  scan-derived loops; multipliers propagate callers->callees in reverse
+  module order (a topological order, since defs precede uses).  A while
+  without a known trip count (data-dependent loop, e.g. FISTA) gets
+  multiplier 1 and is counted in ``unknown_trip_loops``.
+
+Everything is per-chip: the HLO is the post-partitioning per-device program.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"                 # result name
+    r"(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s*"         # result type
+    r"([\w\-]+)\(")                                       # opcode
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count\":\{\"n\":\"(\d+)\"")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+
+# instructions that move no HBM bytes of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call", "bitcast-convert", "reshape",
+    "add-dependency", "domain", "opt-barrier",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _numel(type_str: str) -> int:
+    n = 1
+    for d in _shape_dims(type_str):
+        n *= d
+    return n
+
+
+_GROUPS_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _crosses_pod(line: str, pod_chips: int) -> bool:
+    """Does any replica group span two pods (device id // pod_chips)?"""
+    m = _GROUPS_IOTA_FULL_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        import numpy as np
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        ids = ids.reshape(g, s) // pod_chips
+        return bool((ids != ids[:, :1]).any())
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [int(x) // pod_chips for x in m.group(1).split(",")]
+        return len(set(ids)) > 1
+    return False
+
+
+def _link_bytes(op: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return 2.0 * result_bytes * (n - 1) / n
+    if op.startswith("all-gather"):
+        return result_bytes * (n - 1) / n
+    if op.startswith("reduce-scatter"):
+        return float(result_bytes) * (n - 1)
+    if op.startswith("all-to-all"):
+        return result_bytes * (n - 1) / n
+    if op.startswith("collective-permute"):
+        return float(result_bytes)
+    return 0.0
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], List[str]]:
+    comps: Dict[str, List[str]] = {}
+    order: List[str] = []
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if (line.startswith(("%", "ENTRY")) and "{" in line and "(" in line):
+            name = stripped.split()[0].lstrip("%")
+            if stripped.startswith("ENTRY"):
+                name = "ENTRY"
+            cur = name
+            comps[cur] = []
+            order.append(cur)
+            continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, order
+
+
+class _CompStats:
+    __slots__ = ("flops", "bytes", "coll", "n_coll", "edges", "unknown_trip",
+                 "dcn")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: Dict[str, float] = defaultdict(float)
+        self.n_coll = 0
+        self.edges: List[Tuple[str, float]] = []   # (callee, trip multiplier)
+        self.unknown_trip = 0
+        self.dcn = 0.0                             # pod-crossing link bytes
+
+
+# ops whose real traffic is the *slice*, not the full operand
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+
+def _fusion_param_reads(lines: List[str]) -> Tuple[List[float], float, float]:
+    """For a fusion computation: (per-param read bytes, output bytes, flops).
+
+    Two aliasing patterns dominate scanned models and must not be charged at
+    full-buffer granularity per loop iteration:
+      * a parameter whose every use is a slicing op is read at slice size
+        (dynamic-slice of stacked layer weights inside the fused body);
+      * a parameter used (only) as the TARGET (operand 0) of a
+        dynamic-update-slice aliases in place: 0 read bytes, and when the
+        fusion ROOT is that DUS (scan-output stacking) the write is the
+        update slice, not the stacked buffer.
+    """
+    sym: Dict[str, str] = {}
+    params: Dict[str, int] = {}
+    ptypes: Dict[int, str] = {}
+    uses: Dict[str, List[Tuple[str, str, bool]]] = defaultdict(list)
+    dus_update_bytes: Dict[str, float] = {}
+    root_name = None
+    root_opcode = None
+    root_operands: List[str] = []
+    flops = 0.0
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode = m.groups()
+        sym[name] = rtype
+        tail = line[m.end():line.find(")", m.end()) + 1]
+        ops = _OPERAND_RE.findall(tail)
+        if line.lstrip().startswith("ROOT"):
+            root_name, root_opcode, root_operands = name, opcode, ops
+        if opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", line)
+            if pm:
+                params[name] = int(pm.group(1))
+                ptypes[int(pm.group(1))] = rtype
+            continue
+        if opcode == "dot":
+            lhs_type = sym.get(ops[0], "") if ops else ""
+            cd = _LHS_CDIMS_RE.search(line)
+            k = 1
+            if cd and lhs_type:
+                dims = _shape_dims(lhs_type)
+                for ci in (cd.group(1).split(",") if cd.group(1) else []):
+                    if int(ci) < len(dims):
+                        k *= dims[int(ci)]
+            flops += 2.0 * _numel(rtype) * k
+        if opcode == "dynamic-update-slice" and len(ops) > 1:
+            dus_update_bytes[name] = float(_shape_bytes(sym.get(ops[1], "")))
+        for i, op_name in enumerate(ops):
+            if op_name in params:
+                is_dus_target = (opcode == "dynamic-update-slice" and i == 0)
+                uses[op_name].append((opcode, rtype, is_dus_target))
+
+    n = max(ptypes) + 1 if ptypes else 0
+    reads = [0.0] * n
+    for pname, ordinal in params.items():
+        us = uses.get(pname, [])
+        if not us:
+            reads[ordinal] = float(_shape_bytes(ptypes[ordinal]))
+        elif all(t for _, _, t in us):                   # only DUS target
+            reads[ordinal] = 0.0
+        elif all(op in _SLICING_OPS or t for op, _, t in us):
+            reads[ordinal] = float(sum(
+                _shape_bytes(rt) for op, rt, t in us
+                if not t and op in _SLICING_OPS))
+        else:
+            reads[ordinal] = float(_shape_bytes(ptypes[ordinal]))
+
+    def _out_bytes_of(name: str) -> float:
+        if name in dus_update_bytes:
+            return dus_update_bytes[name]
+        return float(_shape_bytes(sym.get(name, "")))
+
+    if root_opcode == "tuple":
+        out_bytes = sum(_out_bytes_of(o) for o in root_operands)
+    elif root_name is not None:
+        out_bytes = _out_bytes_of(root_name)
+    else:
+        out_bytes = 0.0
+    return reads, out_bytes, flops
+
+
+def _analyze_computation(lines: List[str],
+                         fusion_info: Dict[str, Tuple[List[float], float]],
+                         pod_chips: int = 256) -> _CompStats:
+    st = _CompStats()
+    sym: Dict[str, str] = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode = m.groups()
+        sym[name] = rtype
+
+        if opcode == "while":
+            trip_m = _TRIP_RE.search(line)
+            trip = float(trip_m.group(1)) if trip_m else 1.0
+            if not trip_m:
+                st.unknown_trip += 1
+            body = _BODY_RE.search(line)
+            cond = _COND_RE.search(line)
+            if body:
+                st.edges.append((body.group(1), trip))
+            if cond:
+                st.edges.append((cond.group(1), trip + 1.0))
+            continue
+        if opcode in ("call", "async-start"):
+            ta = _TO_APPLY_RE.search(line)
+            if ta:
+                st.edges.append((ta.group(1), 1.0))
+            continue
+        if opcode == "conditional":
+            for mm in _BRANCH_RE.finditer(line):
+                st.edges.append((mm.group(1), 1.0))
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for callee in _OPERAND_RE.findall(bm.group(1)):
+                    st.edges.append((callee, 1.0))
+            continue
+
+        # collectives: link bytes + HBM bytes
+        if opcode.replace("-start", "") in _COLLECTIVES:
+            if opcode.endswith("-done"):
+                continue
+            base = opcode.replace("-start", "")
+            n = _group_size(line)
+            rb = _shape_bytes(rtype)
+            if opcode.endswith("-start"):
+                rb = rb // 2 or rb     # (operand, result) tuple: count once
+            lb = _link_bytes(base, rb, n)
+            st.coll[base] += lb
+            if _crosses_pod(line, pod_chips):
+                st.dcn += lb
+            st.n_coll += 1
+            st.bytes += 2 * rb
+            continue
+
+        if opcode == "dot":
+            # 2 * |result| * prod(lhs contracting dims)
+            tail = line[m.end():]
+            ops = _OPERAND_RE.findall(tail)
+            lhs_type = sym.get(ops[0], "") if ops else ""
+            cdims = _LHS_CDIMS_RE.search(line)
+            k = 1
+            if cdims and lhs_type:
+                dims = _shape_dims(lhs_type)
+                for ci in (cdims.group(1).split(",") if cdims.group(1) else []):
+                    ci = int(ci)
+                    if ci < len(dims):
+                        k *= dims[ci]
+            st.flops += 2.0 * _numel(rtype) * k
+
+        if opcode == "fusion":
+            cm = _CALLS_RE.search(line)
+            reads, f_out, f_flops = fusion_info.get(
+                cm.group(1) if cm else "", ([], None, 0.0))
+            st.flops += f_flops
+            tail = line[m.end():line.find(")", m.end()) + 1]
+            ops = _OPERAND_RE.findall(tail)
+            b = float(_shape_bytes(rtype)) if f_out is None else f_out
+            for i, op_name in enumerate(ops):
+                if i < len(reads):
+                    b += reads[i]
+                else:
+                    b += _shape_bytes(sym.get(op_name, ""))
+            st.bytes += b
+            continue
+
+        if opcode in _SLICING_OPS:
+            st.bytes += 2.0 * _shape_bytes(rtype)     # read slice + write
+            continue
+        if opcode == "dynamic-update-slice":
+            tail = line[m.end():line.find(")", m.end()) + 1]
+            ops = _OPERAND_RE.findall(tail)
+            upd = _shape_bytes(sym.get(ops[1], "")) if len(ops) > 1 else 0
+            st.bytes += 2.0 * upd                      # in-place update
+            continue
+        if opcode == "scatter":
+            tail = line[m.end():line.find(")", m.end()) + 1]
+            ops = _OPERAND_RE.findall(tail)
+            upd = _shape_bytes(sym.get(ops[-1], "")) if ops else 0
+            st.bytes += 2.0 * upd
+            continue
+        if opcode in ("broadcast", "copy", "transpose"):
+            st.bytes += 2.0 * _shape_bytes(rtype)
+            continue
+
+        if opcode in _FREE_OPS:
+            # custom-call may still move bytes; count it conservatively
+            if opcode != "custom-call":
+                continue
+
+        # HBM traffic: unique operand bytes + result bytes
+        tail = line[m.end():line.find(")", m.end()) + 1]
+        b = _shape_bytes(rtype)
+        seen = set()
+        for op_name in _OPERAND_RE.findall(tail):
+            if op_name in seen:
+                continue
+            seen.add(op_name)
+            b += _shape_bytes(sym.get(op_name, ""))
+        st.bytes += b
+    return st
+
+
+def analyze_module(hlo: str, pod_chips: int = 256) -> Dict:
+    """Trip-count-aware per-chip FLOPs / HBM bytes / collective link bytes."""
+    comps, order = _split_computations(hlo)
+    fusion_info = {name: _fusion_param_reads(lines)
+                   for name, lines in comps.items()
+                   if "fused" in name or "fusion" in name}
+    stats = {name: _analyze_computation(lines, fusion_info, pod_chips)
+             for name, lines in comps.items()}
+
+    # multipliers: reverse module order is topological (defs precede uses)
+    mult: Dict[str, float] = defaultdict(float)
+    mult["ENTRY"] = 1.0
+    for name in reversed(order):
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for callee, trip in stats[name].edges:
+            if callee in stats:
+                mult[callee] += m * trip
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    dcn = 0.0
+    by_type: Dict[str, float] = defaultdict(float)
+    n_coll = 0
+    unknown = 0
+    for name, st in stats.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        total_flops += st.flops * m
+        total_bytes += st.bytes * m
+        dcn += st.dcn * m
+        for k, v in st.coll.items():
+            by_type[k] += v * m
+        n_coll += st.n_coll
+        unknown += st.unknown_trip
+
+    return {
+        "flops_per_chip": total_flops,
+        "bytes_per_chip": total_bytes,
+        "per_chip_link_bytes": float(sum(by_type.values())),
+        "dcn_link_bytes": dcn,
+        "by_type": dict(by_type),
+        "n_collective_ops": n_coll,
+        "unknown_trip_loops": unknown,
+    }
+
+
+def cost_summary(compiled) -> Dict:
+    """analyze_module + memory_analysis + XLA's (loop-blind) cost_analysis."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    stats = analyze_module(compiled.as_text())
+    return {
+        **stats,
+        "xla_flops_per_chip": float(ca.get("flops", 0.0)),
+        "xla_bytes_per_chip": float(ca.get("bytes accessed", 0.0)),
+        "arg_bytes": int(ma.argument_size_in_bytes),
+        "out_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_bytes_est": int(ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+    }

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — smoke tests see one
+CPU device; only the dry-run (which sets XLA_FLAGS first) sees 512.
+
+Mesh geometry (TPU v5e pods):
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+The "data" axis is the paper's serverless worker pool; "model" is tensor
+parallelism inside one worker (a 16-chip bundle — the thing Lambda could
+never provide); "pod" extends the worker pool across the DCN boundary that
+plays the role of the paper's slow star-network links (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# Hardware constants for the roofline terms (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12          # per chip, FLOP/s
+HBM_BW = 819e9                    # per chip, B/s
+ICI_BW = 50e9                     # per link, B/s (~per-chip effective)
+HBM_PER_CHIP = 16 * 1024 ** 3     # 16 GiB

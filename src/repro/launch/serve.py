@@ -1,0 +1,97 @@
+"""Serving driver: batched prefill + decode against the model zoo.
+
+Serves a (reduced by default) model with batched greedy decoding — the
+serving twin of launch/train.py.  On a pod the same prefill/decode steps
+are the ones the dry-run lowers at full shape (32k prefill, 32k-context
+decode, 500k long-context decode for the sub-quadratic archs).
+
+  python -m repro.launch.serve --arch zamba2_1_2b --batch 4 \\
+      --prompt-len 64 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data import lm as lm_data
+from repro.models import model as model_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--preset", choices=("tiny", "full"), default="tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.preset == "full" else \
+        reduced(get_config(args.arch))
+    B, P, G = args.batch, args.prompt_len, args.gen_len
+    max_len = P + G
+    print(f"[serve] arch={args.arch} preset={args.preset} batch={B} "
+          f"prompt={P} gen={G}")
+
+    params = model_mod.init_params(jax.random.PRNGKey(args.seed), cfg)
+    cache = model_mod.init_cache(cfg, B, max_len)
+
+    # synthetic prompt batch
+    key = jax.random.PRNGKey(args.seed + 1)
+    batch = {}
+    if cfg.family == "audio":
+        batch["embeds"] = (jax.random.normal(
+            key, (B, P, cfg.d_model), jnp.float32) * 0.02).astype(
+                jnp.dtype(cfg.dtype))
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = (jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_img_tokens, cfg.d_model),
+            jnp.float32) * 0.02).astype(jnp.dtype(cfg.dtype))
+
+    prefill = jax.jit(lambda p, b, c: model_mod.prefill(p, cfg, b, c,
+                                                        last_only=True))
+    decode = jax.jit(lambda p, b, c: model_mod.decode_step(p, cfg, b, c))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+
+    toks = [next_tok]
+    t0 = time.time()
+    for i in range(G - 1):
+        step_batch = {"positions": jnp.full((B,), P + i, jnp.int32)}
+        if cfg.family == "audio":
+            # audio backbone: embed the sampled code id through a stub table
+            step_batch["embeds"] = jnp.take(
+                params["embed"], next_tok, axis=0)[:, None, :]
+        else:
+            step_batch["tokens"] = next_tok[:, None]
+        if cfg.family == "vlm":
+            step_batch["img_embeds"] = batch["img_embeds"]
+        logits, cache = decode(params, step_batch, cache)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        toks.append(next_tok)
+    jax.block_until_ready(toks[-1])
+    t_decode = time.time() - t0
+
+    out = jnp.stack(toks, axis=1)
+    print(f"[serve] prefill: {B*P} tokens in {t_prefill:.3f}s "
+          f"({B*P/t_prefill:.0f} tok/s incl. compile)")
+    print(f"[serve] decode:  {B*(G-1)} tokens in {t_decode:.3f}s "
+          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s)")
+    print(f"[serve] sample output ids[0,:16]: {out[0,:16].tolist()}")
+    assert bool(jnp.all((out >= 0) & (out < cfg.padded_vocab)))
+    return out
+
+
+if __name__ == "__main__":
+    main()

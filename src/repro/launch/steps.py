@@ -1,0 +1,259 @@
+"""Step assembly: (arch, shape, mode, mesh) -> a lowerable, sharded step.
+
+This is the single place that knows how to put a workload on a mesh; the
+dry-run, the train/serve drivers, and the integration tests all consume
+``build_step``.  Nothing here allocates device memory — argument pytrees
+are ShapeDtypeStructs (the smoke/integration paths pass real arrays of the
+same structure).
+
+Modes
+-----
+  sgd    : conventional data-parallel AdamW step (ZeRO-1 moments, optional
+           FSDP weights).  The baseline the paper compares against — one
+           gradient all-reduce per step.
+  admm   : one consensus-ADMM round (the paper's technique): K_w local Adam
+           steps + ONE consensus all-reduce over the worker axes.
+  prefill: fill the KV cache from a full prompt, return last-token logits.
+  decode : one new token against the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeConfig, cell_is_applicable,
+                                input_specs)
+from repro.core import trainer as trainer_mod
+from repro.models import model as model_mod
+from repro.optim import optimizers as opt_mod
+from repro.parallel import ctx, sharding
+
+Pytree = Any
+
+# archs whose per-worker ADMM state exceeds one 16-chip worker's HBM at
+# W = data-axis size; their "worker" is a whole pod (DESIGN.md §4)
+_ADMM_POD_WORKER_PARAMS = 20e9
+
+
+class StepBundle(NamedTuple):
+    fn: Callable                 # jit-able python callable
+    args: Tuple[Pytree, ...]     # ShapeDtypeStruct pytrees
+    in_specs: Tuple[Pytree, ...]
+    out_specs: Pytree            # or None to infer
+    rules: Dict[str, P]          # activation rules to install while tracing
+    meta: Dict[str, Any]
+
+
+def _sds_params(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(
+        functools.partial(model_mod.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _rep_like(tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda l: P(*([None] * l.ndim)), tree)
+
+
+def admm_worker_axes(cfg: ModelConfig, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Which mesh axes form the ADMM worker pool for this arch (None =
+    technique memory-inapplicable on this mesh; see DESIGN.md §4)."""
+    if cfg.param_count() > _ADMM_POD_WORKER_PARAMS:
+        return ("pod",) if "pod" in mesh.axis_names else None
+    return sharding.dp_axes(mesh)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               mode: str) -> Optional[StepBundle]:
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return None
+    rules = sharding.activation_rules(cfg, mesh, shape.global_batch)
+    if mode == "sgd":
+        return _build_sgd(cfg, shape, mesh, rules)
+    if mode == "admm":
+        return _build_admm(cfg, shape, mesh, rules)
+    if mode == "prefill":
+        return _build_prefill(cfg, shape, mesh, rules)
+    if mode == "decode":
+        return _build_decode(cfg, shape, mesh, rules)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def default_modes(shape: ShapeConfig) -> Tuple[str, ...]:
+    if shape.kind == "train":
+        return ("sgd", "admm")
+    if shape.kind == "prefill":
+        return ("prefill",)
+    return ("decode",)
+
+
+# ---------------------------------------------------------------------------
+# train (sgd)
+# ---------------------------------------------------------------------------
+
+
+def _build_sgd(cfg, shape, mesh, rules) -> StepBundle:
+    params = _sds_params(cfg)
+    opt = jax.eval_shape(opt_mod.adamw_init, params)
+    batch = input_specs(cfg, shape)
+
+    p_spec = sharding.param_spec_tree(cfg, params, mesh)
+    z_spec = sharding.zero1_spec_tree(cfg, params, mesh)
+    opt_spec = {"m": z_spec, "v": z_spec, "step": P()}
+    b_spec = sharding.batch_spec_tree(batch, mesh)
+
+    step = trainer_mod.make_sgd_step(cfg)
+    out_specs = (p_spec, opt_spec, _rep_like(
+        jax.eval_shape(step, params, opt, batch)[2]))
+    return StepBundle(
+        fn=step, args=(params, opt, batch),
+        in_specs=(p_spec, opt_spec, b_spec), out_specs=out_specs,
+        rules=rules,
+        meta={"mode": "sgd", "tokens": shape.global_batch * shape.seq_len})
+
+
+# ---------------------------------------------------------------------------
+# train (admm consensus round)
+# ---------------------------------------------------------------------------
+
+
+def _build_admm(cfg, shape, mesh, rules, *, local_steps: int = 4
+                ) -> Optional[StepBundle]:
+    waxes = admm_worker_axes(cfg, mesh)
+    if waxes is None:
+        return None
+    import math
+    W = math.prod(mesh.shape[a] for a in waxes)
+    if shape.global_batch % W:
+        return None
+    ccfg = trainer_mod.ConsensusConfig(n_workers=W, local_steps=local_steps)
+
+    state = jax.eval_shape(
+        functools.partial(trainer_mod.init_state, cfg=cfg, ccfg=ccfg),
+        jax.random.PRNGKey(0))
+
+    # per-worker batch: (W, B_w, ...) on every input leaf
+    flat_batch = input_specs(cfg, shape)
+    B_w = shape.global_batch // W
+    batch = {k: jax.ShapeDtypeStruct((W, B_w) + v.shape[1:], v.dtype)
+             for k, v in flat_batch.items()}
+
+    params = _sds_params(cfg)
+    # inner (per-worker) spec may not reuse the worker axes; big archs FSDP
+    # the worker state over the remaining data axes
+    fsdp_inner = cfg.fsdp and bool(
+        tuple(a for a in sharding.dp_axes(mesh) if a not in waxes))
+    inner = sharding.param_spec_tree(cfg, params, mesh, fsdp=fsdp_inner,
+                                     worker_axes=waxes)
+    stacked = sharding.stacked_spec_tree(inner, waxes)
+    z_spec = inner
+
+    state_spec = trainer_mod.ConsensusState(
+        x=stacked, u=stacked, z=z_spec,
+        opt={"m": stacked, "v": stacked, "step": P()},
+        rho=P(), r_norm=P(), s_norm=P(), round=P())
+
+    w = waxes if len(waxes) > 1 else waxes[0]
+    free_dp = tuple(a for a in sharding.dp_axes(mesh) if a not in waxes)
+    free_sz = sharding.dp_size(mesh) // W
+    inner_b = ((free_dp if len(free_dp) > 1 else free_dp[0])
+               if free_dp and B_w % max(free_sz, 1) == 0 else None)
+    b_spec = {k: P(w, inner_b, *([None] * (len(v.shape) - 2)))
+              for k, v in batch.items()}
+
+    # activation rules inside the per-worker vmap: batch dims may only use
+    # the dp axes NOT consumed by the worker stacking
+    rules = {"btd": P(inner_b, None, None), "btv": P(inner_b, None, "model")}
+    eff_heads = cfg.attn_head_pad or cfg.n_heads
+    if eff_heads and eff_heads % sharding.model_size(mesh) == 0:
+        rules["bshd"] = P(inner_b, None, "model", None)
+
+    step = trainer_mod.make_round_step(cfg, ccfg)
+    metrics = jax.eval_shape(step, state, batch)[1]
+    return StepBundle(
+        fn=step, args=(state, batch),
+        in_specs=(state_spec, b_spec),
+        out_specs=(state_spec, _rep_like(metrics)),
+        rules=rules,
+        meta={"mode": "admm", "n_workers": W, "local_steps": local_steps,
+              "tokens": shape.global_batch * shape.seq_len * local_steps})
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _serve_param_specs(cfg, params, mesh):
+    return sharding.param_spec_tree(cfg, params, mesh, fsdp=cfg.fsdp_serve)
+
+
+def _build_prefill(cfg, shape, mesh, rules) -> StepBundle:
+    params = _sds_params(cfg)
+    batch = input_specs(cfg, shape)
+    cache = model_mod.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 abstract=True)
+
+    p_spec = _serve_param_specs(cfg, params, mesh)
+    b_spec = sharding.batch_spec_tree(batch, mesh)
+    c_spec = sharding.cache_spec_tree(cfg, cache, mesh)
+
+    def step(params, batch, cache):
+        logits, cache = model_mod.prefill(params, cfg, batch, cache,
+                                          last_only=True)
+        return logits, cache
+
+    dp = sharding.dp_axes(mesh)
+    dpn = dp if len(dp) > 1 else dp[0]
+    logit_spec = P(dpn if shape.global_batch % sharding.dp_size(mesh) == 0
+                   else None, None, "model")
+    return StepBundle(
+        fn=step, args=(params, batch, cache),
+        in_specs=(p_spec, b_spec, c_spec),
+        out_specs=(logit_spec, c_spec), rules=rules,
+        meta={"mode": "prefill",
+              "tokens": shape.global_batch * shape.seq_len})
+
+
+def _build_decode(cfg, shape, mesh, rules) -> StepBundle:
+    params = _sds_params(cfg)
+    batch = input_specs(cfg, shape)            # one-token inputs + positions
+    cache = model_mod.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 abstract=True)
+
+    p_spec = _serve_param_specs(cfg, params, mesh)
+    b_spec = sharding.batch_spec_tree(batch, mesh)
+    c_spec = sharding.cache_spec_tree(cfg, cache, mesh)
+
+    def step(params, batch, cache):
+        return model_mod.decode_step(params, cfg, batch, cache)
+
+    dp = sharding.dp_axes(mesh)
+    dpn = dp if len(dp) > 1 else dp[0]
+    logit_spec = P(dpn if shape.global_batch % sharding.dp_size(mesh) == 0
+                   else None, None, "model")
+    return StepBundle(
+        fn=step, args=(params, batch, cache),
+        in_specs=(p_spec, b_spec, c_spec),
+        out_specs=(logit_spec, c_spec), rules=rules,
+        meta={"mode": "decode", "tokens": shape.global_batch})
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_step(bundle: StepBundle, mesh: Mesh):
+    named_in = tuple(sharding.to_named(mesh, s) for s in bundle.in_specs)
+    named_out = (sharding.to_named(mesh, bundle.out_specs)
+                 if bundle.out_specs is not None else None)
+    jitted = jax.jit(bundle.fn, in_shardings=named_in,
+                     out_shardings=named_out)
+    with mesh, ctx.use_rules({k: jax.sharding.NamedSharding(mesh, v)
+                              for k, v in bundle.rules.items()}):
+        return jitted.lower(*bundle.args)

@@ -1,0 +1,239 @@
+"""Memory-bounded attention for training/prefill/decode.
+
+The workhorse is ``block_attention``: a flash-style online-softmax sweep over
+a *static list of (q_block, kv_block) pairs*.  Enumerating only the valid
+blocks (lower triangle for causal, a band for sliding-window) means the
+compiled HLO performs the exact causal FLOPs — not the masked full square —
+while the working set stays at one (chunk_q x chunk_kv) tile per step.
+This is also the pure-jnp oracle the Pallas flash kernel validates against.
+
+GQA is computed in grouped layout (B, S, KV, G, hd) so K/V are never
+materialised repeated across query groups.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, *, bias: bool = False):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.init_dense(ks[0], d_model, n_heads * head_dim, dtype, bias=bias),
+        "wk": layers.init_dense(ks[1], d_model, n_kv_heads * head_dim, dtype, bias=bias),
+        "wv": layers.init_dense(ks[2], d_model, n_kv_heads * head_dim, dtype, bias=bias),
+        "wo": layers.init_dense(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Static block-pair enumeration
+# ---------------------------------------------------------------------------
+
+def causal_block_pairs(nq: int, nkv: int, window_blocks: Optional[int] = None,
+                       q_block_offset: int = 0) -> np.ndarray:
+    """All (i, j) kv-block indices block i attends to (causal, optional band).
+
+    ``q_block_offset`` shifts query blocks in kv-block units (used when the
+    query chunk sits at the end of a longer kv sequence, e.g. chunked
+    prefill).  Returned array is static — it parameterises a lax.scan.
+    """
+    pairs = []
+    for i in range(nq):
+        hi = min(i + q_block_offset, nkv - 1)
+        lo = 0
+        if window_blocks is not None:
+            lo = max(0, hi - window_blocks)
+        for j in range(lo, hi + 1):
+            pairs.append((i, j))
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def full_block_pairs(nq: int, nkv: int) -> np.ndarray:
+    return np.asarray([(i, j) for i in range(nq) for j in range(nkv)],
+                      dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Core: online-softmax block sweep
+# ---------------------------------------------------------------------------
+
+def block_attention(
+    q: jnp.ndarray,                      # (B, Sq, H, hd)
+    k: jnp.ndarray,                      # (B, Skv, KV, hd)
+    v: jnp.ndarray,                      # (B, Skv, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,        # sliding-window size (tokens)
+    q_offset: int = 0,                   # absolute position of q[:, 0]
+    chunk: int = 512,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    c = min(chunk, Sq, Skv)
+    while Sq % c or Skv % c:             # tiny smoke shapes
+        c -= 1
+    cq = ck = c
+    nq, nkv = Sq // cq, Skv // ck
+    scale = hd ** -0.5
+
+    if causal:
+        wb = None if window is None else -(-window // ck)  # ceil
+        assert q_offset % ck == 0, "q_offset must be chunk aligned"
+        pairs = causal_block_pairs(nq, nkv, wb, q_block_offset=q_offset // ck)
+    else:
+        pairs = full_block_pairs(nq, nkv)
+
+    qb = q.reshape(B, nq, cq, KV, G, hd)
+    kb = k.reshape(B, nkv, ck, KV, hd)
+    vb = v.reshape(B, nkv, ck, KV, hd)
+
+    acc0 = jnp.zeros((B, nq, cq, KV, G, hd), jnp.float32)
+    m0 = jnp.full((B, nq, cq, KV, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, nq, cq, KV, G), jnp.float32)
+
+    q_pos_in_chunk = jnp.arange(cq)
+    k_pos_in_chunk = jnp.arange(ck)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+
+        if causal:
+            qpos = q_offset + i * cq + q_pos_in_chunk          # (cq,)
+            kpos = j * ck + k_pos_in_chunk                      # (ck,)
+            ok = qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                ok &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        m_safe = jnp.maximum(m_new, NEG_INF)
+        p = jnp.exp(s - m_safe[..., None])                      # (b,q,k,g,c)
+        alpha = jnp.exp(jnp.maximum(mi, NEG_INF) - m_safe)
+        l_new = li * alpha + p.sum(axis=-1)
+        a_new = ai * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vj, preferred_element_type=jnp.float32)
+
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.asarray(pairs))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference (naive) attention — oracle for tests and tiny smoke shapes
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Skv)
+        ok = qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (no causal mask, short kv) — chunk over q only
+# ---------------------------------------------------------------------------
+
+def cross_attention(q, k, v, *, chunk_q: int = 512):
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    cq = min(chunk_q, Sq)
+    if Sq % cq != 0:
+        cq = Sq  # fall back for odd lengths
+    nq = Sq // cq
+    qb = q.reshape(B, nq, cq, KV, G, hd)
+
+    def one(qi):
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qi, k,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bqkgc,bckd->bqkgd", p, v,
+                          preferred_element_type=jnp.float32)
+
+    out = jax.lax.map(one, jnp.swapaxes(qb, 0, 1))      # (nq, B, cq, KV, G, hd)
+    out = jnp.swapaxes(out, 0, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token against a (possibly ring) KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jnp.ndarray,                      # (B, 1, H, hd)
+    k_cache: jnp.ndarray,                # (B, Smax, KV, hd) — keys post-RoPE
+    v_cache: jnp.ndarray,                # (B, Smax, KV, hd)
+    positions: jnp.ndarray,              # (B,) index of the NEW token
+) -> jnp.ndarray:
+    """Valid slots are arange(Smax) <= position — correct for both linear and
+    ring (sliding-window) caches because ring slots are all valid once
+    position >= Smax and attention is order-independent over slots."""
+    B, _, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    valid = jnp.arange(Smax)[None, :] <= positions[:, None]      # (B, Smax)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(cache: jnp.ndarray, new: jnp.ndarray,
+                 positions: jnp.ndarray, *, ring: bool = False) -> jnp.ndarray:
+    """Write one token per sequence. cache (B,Smax,KV,hd), new (B,1,KV,hd)."""
+    Smax = cache.shape[1]
+    slots = positions % Smax if ring else positions
+
+    def write(c, n, s):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+
+    return jax.vmap(write)(cache, new, slots)

@@ -1,0 +1,179 @@
+"""Core layers shared by all architectures (pure JAX, no flax).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function takes an explicit PRNG key; every apply function is functional.
+Compute runs in ``cfg.dtype`` with f32 accumulation where it matters
+(norms, softmax, router logits).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: float = 1.0):
+    k_w, _ = jax.random.split(key)
+    std = scale / (d_in ** 0.5)
+    p = {"w": (jax.random.normal(k_w, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (GPT-NeoX rotate-half convention)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": init_dense(ks[0], d_model, d_ff, dtype),
+            "w_up": init_dense(ks[1], d_model, d_ff, dtype),
+            "w_down": init_dense(ks[2], d_ff, d_model, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": init_dense(ks[0], d_model, d_ff, dtype),
+            "w_down": init_dense(ks[1], d_ff, d_model, dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp(p, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in p:
+        h = jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x)
+    else:
+        h = jax.nn.gelu(dense(p["w_up"], x))
+    return dense(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Gradient dtype barrier
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def grad_downcast(x):
+    """Identity that downcasts the COTANGENT to x's dtype.
+
+    The cross-entropy chain runs in f32; dot_general type promotion then
+    keeps every backward activation (and hence the row-parallel gradient
+    all-reduces and the data-axis grad all-reduce) in f32 even though the
+    forward runs in bf16.  One barrier where the residual stream meets the
+    f32 head halves backward collective and HBM traffic (§Perf H1).
+    """
+    return x
+
+
+def _gd_fwd(x):
+    # residuals must be jax types: carry a 0-sized array just for its dtype
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gd_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+grad_downcast.defvjp(_gd_fwd, _gd_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(head_w: jnp.ndarray, x: jnp.ndarray,
+              n_valid: Optional[int] = None) -> jnp.ndarray:
+    """head_w: (vocab, d_model) — returns f32 logits.
+
+    ``n_valid`` masks Megatron-style vocab padding rows to -inf (the head
+    table may be padded to a mesh-divisible row count; see ModelConfig
+    .vocab_padded).  The mask is a broadcast compare, free under SPMD.
+    """
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        head_w.astype(jnp.float32))
+    V = head_w.shape[0]
+    if n_valid is not None and n_valid < V:
+        valid = jnp.arange(V) < n_valid
+        logits = jnp.where(valid, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy, f32. logits (..., V), labels (...).
+
+    Written to stay partitionable when the vocab axis is sharded
+    (Megatron-style vocab-parallel logits): every reduction over V lowers to
+    a local partial + a tiny all-reduce, and the label pick is an iota
+    compare + masked sum instead of take_along_axis (a gather across vocab
+    shards would force an all-gather of the logits).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    V = logits.shape[-1]
+    hit = jnp.arange(V) == labels[..., None]                  # (..., V) bool
+    ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    return jnp.mean(lse - ll)

@@ -1,0 +1,749 @@
+"""Unified decoder stack for all assigned architectures.
+
+One ``init_params``/``forward``/``prefill``/``decode_step`` API covers the six
+families (dense / moe / audio / vlm / hybrid / ssm).  Layer parameters are
+*stacked* along a leading axis and the stack is traversed with ``lax.scan`` so
+the HLO stays O(1) in depth — essential for the 100-layer dry-run lowers.
+
+Caches are plain pytrees whose leaves carry the same leading layer axis, so a
+single scan threads (params_i, cache_i) per layer during serving.
+
+Activation-sharding hints are injected through ``repro.parallel.ctx`` — the
+model is mesh-agnostic; the launch layer installs the rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe, ssm
+from repro.parallel.ctx import constrain
+
+Pytree = Any
+
+
+# ===========================================================================
+# Parameter initialisation
+# ===========================================================================
+
+
+def _init_block_dense(key, cfg: ModelConfig, dtype):
+    """One transformer block (attn + mlp/moe)."""
+    k_att, k_mlp = jax.random.split(key)
+    p = {
+        "ln1": layers.init_rmsnorm(cfg.d_model, dtype),
+        "ln2": layers.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attention.init_attention(
+            k_att, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype,
+            bias=cfg.qkv_bias),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(k_mlp, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                cfg.top_k, cfg.mlp, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _init_block_cross(key, cfg: ModelConfig, dtype):
+    """VLM cross-attention block (cross-attn + mlp, tanh-gated)."""
+    k_att, k_mlp = jax.random.split(key)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model, dtype),
+        "ln2": layers.init_rmsnorm(cfg.d_model, dtype),
+        "xattn": attention.init_attention(
+            k_att, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype),
+        "mlp": layers.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        "gate_attn": jnp.zeros((), dtype),
+        "gate_mlp": jnp.zeros((), dtype),
+    }
+
+
+def _mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_dim
+
+
+D_CONV = 4  # mamba2 depthwise conv kernel size
+
+
+def _init_block_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, nh, conv_dim = _mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": layers.init_rmsnorm(d, dtype),
+        # in_proj -> [z (d_in), xBC (d_in + 2N), dt (nh)]
+        "w_in": layers.init_dense(ks[0], d, 2 * d_in + 2 * cfg.ssm_state + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (D_CONV, conv_dim), jnp.float32)
+                   * (1.0 / D_CONV ** 0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_in, dtype),
+        "w_out": layers.init_dense(ks[2], d_in, d, dtype),
+    }
+
+
+def _rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+LORA_W = 64  # rank of the RWKV6 data-dependent decay lora
+
+
+def _init_block_rwkv(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    H = _rwkv_heads(cfg)
+    ks = jax.random.split(key, 10)
+    u = (jax.random.normal(ks[0], (H, hd), jnp.float32) * 0.1).astype(jnp.float32)
+    mix = lambda k: (jax.random.uniform(k, (d,), jnp.float32)).astype(dtype)
+    return {
+        "ln1": layers.init_rmsnorm(d, dtype),
+        "ln2": layers.init_rmsnorm(d, dtype),
+        "mu_r": mix(ks[1]), "mu_k": mix(ks[2]), "mu_v": mix(ks[3]),
+        "mu_w": mix(ks[4]), "mu_g": mix(ks[5]),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "lora_a": (jax.random.normal(ks[6], (d, LORA_W), jnp.float32) * 0.01).astype(dtype),
+        "lora_b": jnp.zeros((LORA_W, d), dtype),
+        "u": u,
+        "wr": layers.init_dense(ks[7], d, d, dtype),
+        "wk": layers.init_dense(ks[8], d, d, dtype),
+        "wv": layers.init_dense(ks[9], d, d, dtype),
+        "wg": layers.init_dense(jax.random.fold_in(key, 11), d, d, dtype),
+        "wo": layers.init_dense(jax.random.fold_in(key, 12), d, d, dtype),
+        "gn": layers.init_rmsnorm(d, dtype),
+        # channel mix
+        "mu_ck": mix(jax.random.fold_in(key, 13)),
+        "mu_cr": mix(jax.random.fold_in(key, 14)),
+        "wck": layers.init_dense(jax.random.fold_in(key, 15), d, cfg.d_ff, dtype),
+        "wcv": layers.init_dense(jax.random.fold_in(key, 16), cfg.d_ff, d, dtype),
+        "wcr": layers.init_dense(jax.random.fold_in(key, 17), d, d, dtype),
+    }
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init function over n per-layer keys -> stacked params."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _vlm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, self_layers_per_group). One cross block per group."""
+    g = cfg.cross_attn_every
+    assert cfg.n_layers % g == 0, "vlm depth must divide cross_attn_every"
+    return cfg.n_layers // g, g - 1
+
+
+def _hybrid_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, tail): groups of attn_every mamba blocks + shared attn."""
+    return cfg.n_layers // cfg.attn_every, cfg.n_layers % cfg.attn_every
+
+
+def init_params(key, cfg: ModelConfig) -> Pytree:
+    dtype = layers.dtype_of(cfg)
+    k_emb, k_head, k_layers, k_extra = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(k_emb, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.init_embedding(k_head, cfg.padded_vocab, cfg.d_model, dtype)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        params["blocks"] = _stack_init(
+            lambda k: _init_block_dense(k, cfg, dtype), k_layers, cfg.n_layers)
+    elif cfg.family == "vlm":
+        G, n_self = _vlm_groups(cfg)
+        ka, kb = jax.random.split(k_layers)
+        params["self_blocks"] = jax.vmap(
+            lambda ks: _stack_init(lambda k: _init_block_dense(k, cfg, dtype), ks, n_self)
+        )(jax.random.split(ka, G))
+        params["cross_blocks"] = _stack_init(
+            lambda k: _init_block_cross(k, cfg, dtype), kb, G)
+    elif cfg.family == "hybrid":
+        G, tail = _hybrid_groups(cfg)
+        ka, kb, kc = jax.random.split(k_layers, 3)
+        params["mamba_groups"] = jax.vmap(
+            lambda ks: _stack_init(lambda k: _init_block_mamba(k, cfg, dtype), ks, cfg.attn_every)
+        )(jax.random.split(ka, G))
+        if tail:
+            params["mamba_tail"] = _stack_init(
+                lambda k: _init_block_mamba(k, cfg, dtype), kb, tail)
+        params["shared_attn"] = _init_block_dense(kc, cfg, dtype)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: _init_block_rwkv(k, cfg, dtype), k_layers, cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ===========================================================================
+# Block applications — full-sequence (train / prefill)
+# ===========================================================================
+
+
+def _attn_seq(p, cfg: ModelConfig, x, positions, *, window, kv_out: bool = False):
+    """Pre-norm GQA attention over a full sequence. Optionally return (k, v).
+
+    ``cfg.attn_head_pad`` zero-pads the query-head axis to a mesh-divisible
+    count for the attention op only (§Perf H2): padded heads attend
+    uniformly (zero scores) and their outputs are sliced away before the
+    out-projection, so the math is unchanged while the score einsums shard
+    cleanly over the model axis.
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = layers.dense(p["attn"]["wq"], h).reshape(B, S, H, cfg.hd)
+    k = layers.dense(p["attn"]["wk"], h).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = layers.dense(p["attn"]["wv"], h).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    Hp = cfg.attn_head_pad
+    padded = bool(Hp and Hp > H)
+    if padded:
+        # pad PER KV GROUP: attention groups consecutive G heads per kv
+        # head, so tail-padding would reassign real heads to wrong kv's
+        KV, G, Gp = cfg.n_kv_heads, H // cfg.n_kv_heads, Hp // cfg.n_kv_heads
+        q = q.reshape(B, S, KV, G, cfg.hd)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, Gp - G), (0, 0)))
+        q = q.reshape(B, S, Hp, cfg.hd)
+    q = constrain(q, "bshd")
+    o = attention.block_attention(q, k, v, causal=True, window=window)
+    if padded:
+        o = o.reshape(B, S, KV, Gp, cfg.hd)[:, :, :, :G]
+    o = layers.dense(p["attn"]["wo"], o.reshape(B, S, H * cfg.hd))
+    if kv_out:
+        return x + o, (k, v)
+    return x + o
+
+
+def _ff_seq(p, cfg: ModelConfig, x):
+    """Pre-norm MLP or MoE. Returns (x, aux_loss)."""
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe.moe_ff(p["moe"], h, top_k=cfg.top_k,
+                            capacity_factor=cfg.capacity_factor,
+                            group_size=cfg.moe_group_size or None)
+    else:
+        y, aux = layers.mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+    return constrain(x + y, "btd"), aux
+
+
+def _block_seq(p, cfg: ModelConfig, x, positions, *, kv_out: bool = False):
+    if kv_out:
+        x, kv = _attn_seq(p, cfg, x, positions, window=cfg.sliding_window, kv_out=True)
+        x, aux = _ff_seq(p, cfg, x)
+        return x, aux, kv
+    x = _attn_seq(p, cfg, x, positions, window=cfg.sliding_window)
+    x, aux = _ff_seq(p, cfg, x)
+    return x, aux
+
+
+def _cross_block_seq(p, cfg: ModelConfig, x, img_kv):
+    """VLM gated cross-attention block. img_kv = (k_img, v_img)."""
+    B, S, d = x.shape
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = layers.dense(p["xattn"]["wq"], h).reshape(B, S, cfg.n_heads, cfg.hd)
+    k_img, v_img = img_kv
+    o = attention.cross_attention(q, k_img, v_img)
+    o = layers.dense(p["xattn"]["wo"], o.reshape(B, S, cfg.n_heads * cfg.hd))
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * o
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y = layers.mlp(p["mlp"], h)
+    return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * y
+
+
+def _img_kv(p, cfg: ModelConfig, img_embeds):
+    """Project image embeddings to cross-attn K/V (per cross block)."""
+    B, T, _ = img_embeds.shape
+    k = layers.dense(p["xattn"]["wk"], img_embeds).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    v = layers.dense(p["xattn"]["wv"], img_embeds).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# -- mamba2 ------------------------------------------------------------------
+
+
+def _causal_conv_seq(x, w, b, state=None):
+    """Depthwise causal conv1d. x (B,S,C), w (D_CONV,C).  state (B,D_CONV-1,C)
+    holds the previous tokens (zeros at sequence start)."""
+    B, S, C = x.shape
+    pad = (jnp.zeros((B, D_CONV - 1, C), x.dtype) if state is None
+           else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, S+3, C)
+    out = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(D_CONV))
+    new_state = xp[:, S:]                                       # last D_CONV-1
+    return out + b.astype(x.dtype), new_state
+
+
+def _mamba_split(p, cfg: ModelConfig, x_norm):
+    """in_proj and split into (z, xBC_preconv, dt_raw)."""
+    d_in, nh, conv_dim = _mamba_dims(cfg)
+    zxbcdt = layers.dense(p["w_in"], x_norm)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt_raw = zxbcdt[..., d_in + conv_dim:]
+    return z, xBC, dt_raw
+
+
+def _mamba_core_seq(p, cfg: ModelConfig, xBC, dt_raw, conv_state=None,
+                    ssm_state=None):
+    """conv -> split x,B,C -> SSD scan.  Returns (y, new_conv, new_ssm)."""
+    d_in, nh, _ = _mamba_dims(cfg)
+    N = cfg.ssm_state
+    xBC, new_conv = _causal_conv_seq(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_in]
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    Bsz, S = xs.shape[:2]
+    xh = xs.reshape(Bsz, S, nh, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssm.ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                                 initial_state=ssm_state)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    return y.reshape(Bsz, S, d_in), new_conv, new_ssm
+
+
+def _mamba_block_seq(p, cfg: ModelConfig, x, *, state_out: bool = False,
+                     conv_state=None, ssm_state=None):
+    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xBC, dt_raw = _mamba_split(p, cfg, h)
+    y, new_conv, new_ssm = _mamba_core_seq(p, cfg, xBC, dt_raw, conv_state, ssm_state)
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+    out = x + layers.dense(p["w_out"], y)
+    if state_out:
+        return out, new_conv, new_ssm
+    return out
+
+
+# -- rwkv6 -------------------------------------------------------------------
+
+
+def _token_shift(x, state=None):
+    """(B,S,d) -> previous token per position; state = last token of context."""
+    B, S, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if state is None else state[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _rwkv_time_mix_seq(p, cfg: ModelConfig, x, shift_state=None, wkv_state=None):
+    B, S, d = x.shape
+    H, hd = _rwkv_heads(cfg), cfg.rwkv_head_dim
+    xs = _token_shift(x, shift_state)
+    mix = lambda mu: x + (xs - x) * mu.astype(x.dtype)
+    xr, xk, xv, xw, xg = (mix(p[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"))
+    r = layers.dense(p["wr"], xr).reshape(B, S, H, hd)
+    k = layers.dense(p["wk"], xk).reshape(B, S, H, hd)
+    v = layers.dense(p["wv"], xv).reshape(B, S, H, hd)
+    g = jax.nn.silu(layers.dense(p["wg"], xg))
+    # Finch: data-dependent per-channel decay via low-rank adapter
+    dw = jnp.tanh(xw.astype(jnp.float32) @ p["lora_a"].astype(jnp.float32)) \
+        @ p["lora_b"].astype(jnp.float32)
+    w_log = -jnp.exp(p["w0"] + dw)                              # (B,S,d), <= 0
+    w_log = w_log.reshape(B, S, H, hd)
+    o, new_wkv = ssm.wkv6_chunked(r, k, v, w_log, p["u"], chunk=cfg.ssm_chunk or 64,
+                                  initial_state=wkv_state)
+    # per-head group-norm, then gate
+    o = o.reshape(B, S, d)
+    o_heads = o.reshape(B, S, H, hd).astype(jnp.float32)
+    var = jnp.mean(o_heads * o_heads, axis=-1, keepdims=True)
+    o = (o_heads * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, d)
+    o = (o * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    out = layers.dense(p["wo"], o * g)
+    return out, x[:, -1], new_wkv
+
+
+def _rwkv_channel_mix_seq(p, x, shift_state=None):
+    xs = _token_shift(x, shift_state)
+    xk = x + (xs - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xs - x) * p["mu_cr"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(layers.dense(p["wck"], xk)))
+    out = jax.nn.sigmoid(layers.dense(p["wcr"], xr)) * layers.dense(p["wcv"], kk)
+    return out, x[:, -1]
+
+
+def _rwkv_block_seq(p, cfg: ModelConfig, x, *, state_out=False,
+                    shift_t=None, wkv=None, shift_c=None):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    dt, new_shift_t, new_wkv = _rwkv_time_mix_seq(p, cfg, h, shift_t, wkv)
+    x = x + dt
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    dc, new_shift_c = _rwkv_channel_mix_seq(p, h, shift_c)
+    x = x + dc
+    if state_out:
+        return x, new_shift_t, new_wkv, new_shift_c
+    return x
+
+
+# ===========================================================================
+# Full-sequence forward (train / prefill-without-cache)
+# ===========================================================================
+
+
+def _lm_logits(params, cfg: ModelConfig, x) -> jnp.ndarray:
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return layers.lm_logits(head, x, n_valid=cfg.vocab_size)
+
+
+def _embed_input(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    if cfg.family == "audio":
+        return batch["embeds"]
+    x = layers.embed(params["embed"], batch["tokens"])
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    """Full-sequence forward -> (logits f32 (B,S,V), aux_loss scalar)."""
+    x = _embed_input(params, cfg, batch)
+    x = constrain(x, "btd")
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(x, p):
+            x, aux = _block_seq(p, cfg, x, positions)
+            return x, aux
+        body_fn = jax.checkpoint(body) if remat else body
+        x, auxs = jax.lax.scan(body_fn, x, params["blocks"])
+        aux_total += auxs.sum()
+
+    elif cfg.family == "vlm":
+        img_embeds = batch["img_embeds"]
+
+        def group(x, pg):
+            def self_body(x, p):
+                x, aux = _block_seq(p, cfg, x, positions)
+                return x, aux
+            x, auxs = jax.lax.scan(self_body, x, pg["self"])
+            kv = _img_kv(pg["cross"], cfg, img_embeds)
+            x = _cross_block_seq(pg["cross"], cfg, x, kv)
+            return x, auxs.sum()
+        group_fn = jax.checkpoint(group) if remat else group
+        x, auxs = jax.lax.scan(
+            group_fn, x, {"self": params["self_blocks"], "cross": params["cross_blocks"]})
+        aux_total += auxs.sum()
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, pg):
+            def mamba_body(x, p):
+                return _mamba_block_seq(p, cfg, x), None
+            x, _ = jax.lax.scan(mamba_body, x, pg)
+            x, aux = _block_seq(shared, cfg, x, positions)
+            return x, aux
+        group_fn = jax.checkpoint(group) if remat else group
+        x, auxs = jax.lax.scan(group_fn, x, params["mamba_groups"])
+        aux_total += auxs.sum()
+        if "mamba_tail" in params:
+            def tail_body(x, p):
+                return _mamba_block_seq(p, cfg, x), None
+            tail_fn = jax.checkpoint(tail_body) if remat else tail_body
+            x, _ = jax.lax.scan(tail_fn, x, params["mamba_tail"])
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            return _rwkv_block_seq(p, cfg, x), None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.grad_downcast(x)       # bf16 cotangents upstream (§Perf H1)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _lm_logits(params, cfg, x)
+    return constrain(logits, "btv"), aux_total
+
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    ce = layers.cross_entropy(logits, batch["labels"])
+    return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# Serving: caches, prefill, decode
+# ===========================================================================
+
+
+def _attn_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               *, abstract: bool = False) -> Pytree:
+    """Allocate (or describe, with abstract=True) the decode cache."""
+    dtype = layers.dtype_of(cfg)
+    mk = (lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)) if abstract \
+        else (lambda shape, dt: jnp.zeros(shape, dt))
+    Smax = _attn_cache_len(cfg, max_len)
+    kv = cfg.n_kv_heads
+    hd = cfg.hd
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "audio"):
+        L = cfg.n_layers
+        cache["k"] = mk((L, batch, Smax, kv, hd), dtype)
+        cache["v"] = mk((L, batch, Smax, kv, hd), dtype)
+    elif cfg.family == "vlm":
+        G, n_self = _vlm_groups(cfg)
+        cache["k"] = mk((G, n_self, batch, Smax, kv, hd), dtype)
+        cache["v"] = mk((G, n_self, batch, Smax, kv, hd), dtype)
+        cache["k_img"] = mk((G, batch, cfg.n_img_tokens, kv, hd), dtype)
+        cache["v_img"] = mk((G, batch, cfg.n_img_tokens, kv, hd), dtype)
+    elif cfg.family == "hybrid":
+        G, tail = _hybrid_groups(cfg)
+        d_in, nh, conv_dim = _mamba_dims(cfg)
+        L = cfg.n_layers
+        cache["ssm"] = mk((L, batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        cache["conv"] = mk((L, batch, D_CONV - 1, conv_dim), dtype)
+        cache["attn_k"] = mk((G, batch, Smax, kv, hd), dtype)
+        cache["attn_v"] = mk((G, batch, Smax, kv, hd), dtype)
+    elif cfg.family == "ssm":
+        L, d = cfg.n_layers, cfg.d_model
+        H, hdk = _rwkv_heads(cfg), cfg.rwkv_head_dim
+        cache["wkv"] = mk((L, batch, H, hdk, hdk), jnp.float32)
+        cache["shift_t"] = mk((L, batch, d), dtype)
+        cache["shift_c"] = mk((L, batch, d), dtype)
+    return cache
+
+
+def _write_prefill(cache_kv, new, Smax: int):
+    """Write S prefill tokens into an Smax-slot cache (ring-consistent)."""
+    S = new.shape[1]
+    if S <= Smax:
+        return jax.lax.dynamic_update_slice_in_dim(cache_kv, new, 0, axis=1)
+    # keep the last Smax tokens at slot = pos % Smax
+    last = new[:, S - Smax:]
+    idx = jnp.arange(S - Smax, S) % Smax
+    return cache_kv.at[:, idx].set(last)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache,
+            *, last_only: bool = False) -> Tuple[jnp.ndarray, Pytree]:
+    """Run the full prompt, filling the cache. Returns (logits, cache).
+
+    ``last_only`` returns logits for the final position only (B, 1, V) —
+    what a serving step needs; avoids materialising (B, S, V) f32."""
+    x = _embed_input(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    Smax = cache_max_len(cfg, cache)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(x, inp):
+            p, ck, cv = inp
+            x, _aux, (k, v) = _block_seq(p, cfg, x, positions, kv_out=True)
+            return x, (_write_prefill(ck, k, Smax), _write_prefill(cv, v, Smax))
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "vlm":
+        img_embeds = batch["img_embeds"]
+
+        def group(x, inp):
+            pg, ck, cv = inp
+            def self_body(x, inp2):
+                p, ck_i, cv_i = inp2
+                x, _aux, (k, v) = _block_seq(p, cfg, x, positions, kv_out=True)
+                return x, (_write_prefill(ck_i, k, Smax), _write_prefill(cv_i, v, Smax))
+            x, (ks, vs) = jax.lax.scan(self_body, x, (pg["self"], ck, cv))
+            k_img, v_img = _img_kv(pg["cross"], cfg, img_embeds)
+            x = _cross_block_seq(pg["cross"], cfg, x, (k_img, v_img))
+            return x, (ks, vs, k_img, v_img)
+        x, (ks, vs, kis, vis) = jax.lax.scan(
+            group, x, ({"self": params["self_blocks"], "cross": params["cross_blocks"]},
+                       cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs, k_img=kis, v_img=vis)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        G, tail = _hybrid_groups(cfg)
+        n_per = cfg.attn_every
+        ssm_c = cache["ssm"]; conv_c = cache["conv"]
+        ssm_main = ssm_c[: G * n_per].reshape(G, n_per, *ssm_c.shape[1:])
+        conv_main = conv_c[: G * n_per].reshape(G, n_per, *conv_c.shape[1:])
+
+        def group(x, inp):
+            pg, sg, cg, ck, cv = inp
+            def mamba_body(x, inp2):
+                p, s_i, c_i = inp2
+                x, new_conv, new_ssm = _mamba_block_seq(p, cfg, x, state_out=True)
+                return x, (new_ssm, new_conv)
+            x, (new_s, new_c) = jax.lax.scan(mamba_body, x, (pg, sg, cg))
+            x, _aux, (k, v) = _block_seq(shared, cfg, x, positions, kv_out=True)
+            return x, (new_s, new_c, _write_prefill(ck, k, Smax), _write_prefill(cv, v, Smax))
+        x, (new_s, new_c, ks, vs) = jax.lax.scan(
+            group, x, (params["mamba_groups"], ssm_main, conv_main,
+                       cache["attn_k"], cache["attn_v"]))
+        new_ssm_all = new_s.reshape(G * n_per, *ssm_c.shape[1:])
+        new_conv_all = new_c.reshape(G * n_per, *conv_c.shape[1:])
+        if tail:
+            def tail_body(x, inp2):
+                p, s_i, c_i = inp2
+                x, new_conv, new_ssm = _mamba_block_seq(p, cfg, x, state_out=True)
+                return x, (new_ssm, new_conv)
+            x, (ts, tc) = jax.lax.scan(
+                tail_body, x, (params["mamba_tail"], ssm_c[G * n_per:], conv_c[G * n_per:]))
+            new_ssm_all = jnp.concatenate([new_ssm_all, ts], axis=0)
+            new_conv_all = jnp.concatenate([new_conv_all, tc], axis=0)
+        cache = dict(cache, ssm=new_ssm_all, conv=new_conv_all, attn_k=ks, attn_v=vs)
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, st, wk, sc = inp
+            x, nst, nwk, nsc = _rwkv_block_seq(p, cfg, x, state_out=True)
+            return x, (nst, nwk, nsc)
+        x, (sts, wks, scs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["shift_t"], cache["wkv"], cache["shift_c"]))
+        cache = dict(cache, shift_t=sts, wkv=wks, shift_c=scs)
+
+    if last_only:
+        x = x[:, -1:]
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_logits(params, cfg, x), cache
+
+
+def cache_max_len(cfg: ModelConfig, cache) -> int:
+    if cfg.family in ("dense", "moe", "audio"):
+        return cache["k"].shape[2]
+    if cfg.family == "vlm":
+        return cache["k"].shape[3]
+    if cfg.family == "hybrid":
+        return cache["attn_k"].shape[2]
+    return 0  # ssm: stateful, no kv slots
+
+
+# -- single-token decode ------------------------------------------------------
+
+
+def _attn_decode(p, cfg: ModelConfig, x, positions, ck, cv, *, ring: bool):
+    """One-token attention vs cache. x (B,1,d). Returns (x, ck, cv)."""
+    B = x.shape[0]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = layers.dense(p["attn"]["wq"], h).reshape(B, 1, cfg.n_heads, cfg.hd)
+    k = layers.dense(p["attn"]["wk"], h).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    v = layers.dense(p["attn"]["wv"], h).reshape(B, 1, cfg.n_kv_heads, cfg.hd)
+    pos_b = positions[:, None]                                  # (B,1)
+    q = layers.apply_rope(q, pos_b, cfg.rope_theta)
+    k = layers.apply_rope(k, pos_b, cfg.rope_theta)
+    ck = attention.update_cache(ck, k, positions, ring=ring)
+    cv = attention.update_cache(cv, v, positions, ring=ring)
+    o = attention.decode_attention(q, ck, cv, positions)
+    x = x + layers.dense(p["attn"]["wo"], o.reshape(B, 1, cfg.n_heads * cfg.hd))
+    return x, ck, cv
+
+
+def _block_decode(p, cfg: ModelConfig, x, positions, ck, cv, *, ring: bool):
+    x, ck, cv = _attn_decode(p, cfg, x, positions, ck, cv, ring=ring)
+    x, _aux = _ff_seq(p, cfg, x)
+    return x, ck, cv
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache) -> Tuple[jnp.ndarray, Pytree]:
+    """One new token for every sequence.
+
+    batch: {"tokens" (B,1) | "embeds" (B,1,d), "positions" (B,)}.
+    Returns (logits (B,1,V) f32, updated cache).
+    """
+    x = _embed_input(params, cfg, batch)
+    positions = batch["positions"]
+    B = x.shape[0]
+    ring = cfg.sliding_window is not None
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(x, inp):
+            p, ck, cv = inp
+            x, ck, cv = _block_decode(p, cfg, x, positions, ck, cv, ring=ring)
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "vlm":
+        def group(x, inp):
+            pg, ck, cv, ki, vi = inp
+            def self_body(x, inp2):
+                p, ck_i, cv_i = inp2
+                x, ck_i, cv_i = _block_decode(p, cfg, x, positions, ck_i, cv_i, ring=ring)
+                return x, (ck_i, cv_i)
+            x, (ks, vs) = jax.lax.scan(self_body, x, (pg["self"], ck, cv))
+            x = _cross_block_seq(pg["cross"], cfg, x, (ki, vi))
+            return x, (ks, vs)
+        x, (ks, vs) = jax.lax.scan(
+            group, x, ({"self": params["self_blocks"], "cross": params["cross_blocks"]},
+                       cache["k"], cache["v"], cache["k_img"], cache["v_img"]))
+        cache = dict(cache, k=ks, v=vs)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        G, tail = _hybrid_groups(cfg)
+        n_per = cfg.attn_every
+        d_in, nh, conv_dim = _mamba_dims(cfg)
+        ssm_c, conv_c = cache["ssm"], cache["conv"]
+        ssm_main = ssm_c[: G * n_per].reshape(G, n_per, *ssm_c.shape[1:])
+        conv_main = conv_c[: G * n_per].reshape(G, n_per, *conv_c.shape[1:])
+
+        def mamba_decode(p, x, s_i, c_i):
+            h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+            z, xBC, dt_raw = _mamba_split(p, cfg, h)
+            y, nc, ns = _mamba_core_seq(p, cfg, xBC, dt_raw, c_i, s_i)
+            y = y * jax.nn.silu(z)
+            y = layers.rms_norm(y, p["norm"], cfg.norm_eps)
+            return x + layers.dense(p["w_out"], y), nc, ns
+
+        def group(x, inp):
+            pg, sg, cg, ck, cv = inp
+            def mamba_body(x, inp2):
+                p, s_i, c_i = inp2
+                x, nc, ns = mamba_decode(p, x, s_i, c_i)
+                return x, (ns, nc)
+            x, (new_s, new_c) = jax.lax.scan(mamba_body, x, (pg, sg, cg))
+            x, ck, cv = _block_decode(shared, cfg, x, positions, ck, cv, ring=ring)
+            return x, (new_s, new_c, ck, cv)
+        x, (new_s, new_c, ks, vs) = jax.lax.scan(
+            group, x, (params["mamba_groups"], ssm_main, conv_main,
+                       cache["attn_k"], cache["attn_v"]))
+        new_ssm_all = new_s.reshape(G * n_per, *ssm_c.shape[1:])
+        new_conv_all = new_c.reshape(G * n_per, *conv_c.shape[1:])
+        if tail:
+            def tail_body(x, inp2):
+                p, s_i, c_i = inp2
+                x, nc, ns = mamba_decode(p, x, s_i, c_i)
+                return x, (ns, nc)
+            x, (ts, tc) = jax.lax.scan(
+                tail_body, x, (params["mamba_tail"], ssm_c[G * n_per:], conv_c[G * n_per:]))
+            new_ssm_all = jnp.concatenate([new_ssm_all, ts], axis=0)
+            new_conv_all = jnp.concatenate([new_conv_all, tc], axis=0)
+        cache = dict(cache, ssm=new_ssm_all, conv=new_conv_all, attn_k=ks, attn_v=vs)
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, st, wk, sc = inp
+            x, nst, nwk, nsc = _rwkv_block_seq(
+                p, cfg, x, state_out=True, shift_t=st, wkv=wk, shift_c=sc)
+            return x, (nst, nwk, nsc)
+        x, (sts, wks, scs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["shift_t"], cache["wkv"], cache["shift_c"]))
+        cache = dict(cache, shift_t=sts, wkv=wks, shift_c=scs)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _lm_logits(params, cfg, x), cache

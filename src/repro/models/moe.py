@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FF layer (GShard/Switch-style capacity dispatch).
+
+Routing runs in *groups* (default: one sequence per group, or a fixed
+``group_size`` of tokens): each group computes its own top-k assignment,
+cumsum-based capacity slots, and (Tg, E, cap) dispatch/combine tensors, and
+the groups axis is vmapped.  Grouped routing is what makes the op shardable —
+a group never looks across the batch/data shard boundary, so the SPMD
+partitioner keeps routing entirely local to each data shard (no global
+cumsum).  It also gives prefix-exactness: a group's first t tokens route
+identically regardless of what follows (cumsum is causal), so prefill(S-1)
+matches forward(S) exactly; and single-token groups at decode are dropless.
+
+Dense one-hot dispatch keeps the op MXU-friendly: tokens are routed into a
+(E, capacity, d_model) buffer with an einsum, experts run as one batched
+matmul, and results are combined with the routing weights.  Active FLOPs are
+top_k * tokens * expert-FF (plus dispatch overhead, visible in the roofline
+MODEL_FLOPS/HLO ratio).
+
+Aux load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.ctx import constrain
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             mlp_kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    std = 1.0 / (d_model ** 0.5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts), jnp.float32)
+                   * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[1], (n_experts, d_model, d_ff), jnp.float32)
+                 * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (n_experts, d_ff, d_model), jnp.float32)
+                   * (1.0 / d_ff ** 0.5)).astype(dtype),
+    }
+    if mlp_kind == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[3], (n_experts, d_model, d_ff),
+                                         jnp.float32) * std).astype(dtype)
+    return p
+
+
+def _moe_group(p, top_k: int, cap: int, xt: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Route one group. xt (Tg, d) -> (out (Tg, d), aux scalar)."""
+    Tg, d = xt.shape
+    E = p["router"].shape[-1]
+
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)    # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)                    # (Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-(token, expert) routing tables; a token picks each expert at most
+    # once within its top-k, so reducing over k before the capacity one-hot
+    # is exact and avoids a (Tg, k, E, cap) intermediate.
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)                # (Tg,k,E)
+    active = onehot.sum(axis=1)                                          # (Tg,E) 0/1
+    gate_te = (onehot.astype(jnp.float32)
+               * gate_vals[..., None]).sum(axis=1)                       # (Tg,E)
+    pos = jnp.cumsum(active, axis=0) * active - 1                        # (Tg,E)
+    in_cap = (pos < cap) & (pos >= 0)
+
+    slot = jnp.where(in_cap, pos, cap)                                   # cap = drop
+    disp = (jax.nn.one_hot(slot, cap + 1, dtype=xt.dtype)[..., :cap]
+            * active[..., None].astype(xt.dtype))                        # (Tg,E,cap)
+    combine = (disp.astype(jnp.float32)
+               * gate_te[..., None]).astype(xt.dtype)                    # (Tg,E,cap)
+
+    xe = constrain(jnp.einsum("td,tec->ecd", xt, disp),
+                   "moe_slots")                                          # (E,cap,d)
+    if "w_gate" in p:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    ye = constrain(jnp.einsum("ecf,efd->ecd", h, p["w_down"]),
+                   "moe_slots")                                          # (E,cap,d)
+    out = jnp.einsum("ecd,tec->td", ye, combine)
+
+    # Switch aux loss: E * sum_e (fraction of tokens to e) * (mean router prob e)
+    frac = active.sum(axis=0).astype(jnp.float32) / (Tg * top_k)
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+    return out, aux
+
+
+def moe_ff(p, x: jnp.ndarray, *, top_k: int, capacity_factor: float = 1.25,
+           group_size: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    ``group_size`` defaults to one sequence per group (shrunk to a divisor of
+    S when needed).  Capacity is per-group: cap = top_k*gs*cf/E, floor 1.
+    """
+    B, S, d = x.shape
+    gs = min(group_size or S, S)
+    while S % gs:
+        gs -= 1
+    G = B * (S // gs)
+    xg = x.reshape(G, gs, d)
+
+    E = p["router"].shape[-1]
+    cap = int(max(top_k * gs * capacity_factor / E, 1))
+    cap = min(cap, gs)
+
+    out, aux = jax.vmap(functools.partial(_moe_group, p, top_k, cap))(xg)
+    return out.reshape(B, S, d), aux.mean()

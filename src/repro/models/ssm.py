@@ -1,0 +1,254 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented in *chunked* form for training/prefill — the sequence is
+split into chunks of C tokens; within a chunk the recurrence is expressed as
+a (masked, decayed) attention-like einsum, and a single dense state is carried
+between chunks with a lax.scan.  This is the standard sub-quadratic
+O(S·C + S·N·hd) formulation and doubles as the pure-jnp oracle for the Pallas
+chunked-scan kernels.
+
+Single-token ``*_decode_step`` functions advance the dense state by one token
+(O(1) in context length) — this is what makes ``long_500k`` decode viable.
+
+Conventions
+-----------
+Mamba2 SSD (per head h, scalar decay):
+    a_t = exp(dt_t * A_h)            # A_h < 0 learned, dt_t = softplus(...)
+    S_t = a_t * S_{t-1} + (dt_t * x_t) B_t^T        # S: (hd, N)
+    y_t = S_t C_t + D_h * x_t
+
+RWKV6 WKV (per head, per-key-channel decay w_t in (0,1)):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t             # S: (hd_k, hd_v)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_EPS = -30.0  # floor for log-decays; exp(-30) ~ 1e-13
+
+
+def _split_chunks(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """(B, S, ...) -> (nc, B, C, ...); S must be divisible by chunk."""
+    B, S = x.shape[:2]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+    x = x.reshape(B, nc, chunk, *x.shape[2:])
+    return jnp.moveaxis(x, 1, 0)
+
+
+def _merge_chunks(x: jnp.ndarray) -> jnp.ndarray:
+    """(nc, B, C, ...) -> (B, S, ...)."""
+    x = jnp.moveaxis(x, 0, 1)
+    B, nc, C = x.shape[:3]
+    return x.reshape(B, nc * C, *x.shape[3:])
+
+
+# ===========================================================================
+# Mamba2 SSD
+# ===========================================================================
+
+def ssd_chunked(
+    x: jnp.ndarray,       # (B, S, nh, hd)  inputs (already dt-scaled OUTSIDE? no: raw)
+    dt: jnp.ndarray,      # (B, S, nh)      positive step sizes
+    A: jnp.ndarray,       # (nh,)           negative decay rates
+    Bm: jnp.ndarray,      # (B, S, N)       input projection (shared across heads)
+    Cm: jnp.ndarray,      # (B, S, N)       output projection
+    *,
+    chunk: int = 128,
+    initial_state: jnp.ndarray | None = None,   # (B, nh, hd, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,nh,hd), final_state (B,nh,hd,N))."""
+    Bb, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+
+    f32 = jnp.float32
+    xg = _split_chunks((x * dt[..., None]).astype(f32), C)       # (nc,B,C,nh,hd)
+    dtc = _split_chunks(dt.astype(f32), C)                       # (nc,B,C,nh)
+    Bc = _split_chunks(Bm.astype(f32), C)                        # (nc,B,C,N)
+    Cc = _split_chunks(Cm.astype(f32), C)                        # (nc,B,C,N)
+
+    # log-decay per (chunk-pos, head): la[t] = dt_t * A_h  (<= 0)
+    la = dtc * A.astype(f32)                                     # (nc,B,C,nh)
+    lcum = jnp.cumsum(la, axis=2)                                # inclusive cumsum
+
+    if initial_state is None:
+        S0 = jnp.zeros((Bb, nh, hd, N), f32)
+    else:
+        S0 = initial_state.astype(f32)
+
+    def body(state, inp):
+        xg_i, Bc_i, Cc_i, la_i, lcum_i = inp
+        # ---- intra-chunk (attention-like, causal with decay) -------------
+        # att[t, s] = exp(lcum[t] - lcum[s]) * <C_t, B_s>   for s <= t
+        rel = lcum_i[:, :, None, :] - lcum_i[:, None, :, :]      # (B,C,C,nh)
+        mask = jnp.tril(jnp.ones((la_i.shape[1], la_i.shape[1]), bool))
+        rel = jnp.where(mask[None, :, :, None], rel, LOG_EPS)
+        dec = jnp.exp(jnp.maximum(rel, LOG_EPS))
+        cb = jnp.einsum("btn,bsn->bts", Cc_i, Bc_i)              # (B,C,C)
+        att = dec * cb[..., None]                                # (B,C,C,nh)
+        y_intra = jnp.einsum("btsh,bshd->bthd", att, xg_i)
+
+        # ---- inter-chunk: contribution of carried state -------------------
+        # y_t += exp(lcum[t]) * C_t . state^T
+        dec_t = jnp.exp(jnp.maximum(lcum_i, LOG_EPS))            # (B,C,nh)
+        y_inter = jnp.einsum("btn,bhdn,bth->bthd", Cc_i, state, dec_t)
+
+        # ---- state update --------------------------------------------------
+        # state' = exp(sum la) * state + sum_s exp(lcum[-1]-lcum[s]) xg_s B_s^T
+        tot = lcum_i[:, -1, :]                                   # (B,nh)
+        decay_all = jnp.exp(jnp.maximum(tot, LOG_EPS))           # (B,nh)
+        w_s = jnp.exp(jnp.maximum(tot[:, None, :] - lcum_i, LOG_EPS))  # (B,C,nh)
+        upd = jnp.einsum("bshd,bsn,bsh->bhdn", xg_i, Bc_i, w_s)
+        state = state * decay_all[:, :, None, None] + upd
+        return state, y_intra + y_inter
+
+    state, ys = jax.lax.scan(body, S0, (xg, Bc, Cc, la, lcum))
+    y = _merge_chunks(ys)                                        # (B,S,nh,hd) f32
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,       # (B, nh, hd)
+    dt: jnp.ndarray,      # (B, nh)
+    A: jnp.ndarray,       # (nh,)
+    Bm: jnp.ndarray,      # (B, N)
+    Cm: jnp.ndarray,      # (B, N)
+    state: jnp.ndarray,   # (B, nh, hd, N) f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token SSD update. Returns (y (B,nh,hd), new_state)."""
+    f32 = jnp.float32
+    xf, dtf, Bf, Cf = (t.astype(f32) for t in (x, dt, Bm, Cm))
+    a = jnp.exp(dtf * A.astype(f32))                             # (B,nh)
+    upd = jnp.einsum("bhd,bn->bhdn", xf * dtf[..., None], Bf)
+    state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bhdn,bn->bhd", state, Cf)
+    return y.astype(x.dtype), state
+
+
+def ssd_reference(x, dt, A, Bm, Cm, *, initial_state=None):
+    """Naive per-token scan — oracle for tests."""
+    Bb, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    state = (jnp.zeros((Bb, nh, hd, N), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def body(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        y, state = ssd_decode_step(x_t, dt_t, A, B_t, C_t, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    state, ys = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+# ===========================================================================
+# RWKV6 WKV (Finch) — per-key-channel data-dependent decay
+# ===========================================================================
+
+def wkv6_chunked(
+    r: jnp.ndarray,       # (B, S, H, K)   receptance
+    k: jnp.ndarray,       # (B, S, H, K)   key
+    v: jnp.ndarray,       # (B, S, H, V)   value
+    w: jnp.ndarray,       # (B, S, H, K)   log-decay (<= 0), i.e. log w_t
+    u: jnp.ndarray,       # (H, K)         bonus for current token
+    *,
+    chunk: int = 64,
+    initial_state: jnp.ndarray | None = None,   # (B, H, K, V) f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6. Returns (o (B,S,H,V), final_state (B,H,K,V))."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+
+    f32 = jnp.float32
+    rc = _split_chunks(r.astype(f32), C)
+    kc = _split_chunks(k.astype(f32), C)
+    vc = _split_chunks(v.astype(f32), C)
+    wc = _split_chunks(w.astype(f32), C)                         # log decay
+    lcum = jnp.cumsum(wc, axis=2)                                # (nc,B,C,H,K) inclusive
+
+    if initial_state is None:
+        S0 = jnp.zeros((B, H, K, V), f32)
+    else:
+        S0 = initial_state.astype(f32)
+
+    uf = u.astype(f32)
+
+    def body(state, inp):
+        r_i, k_i, v_i, lc_i = inp                                # (B,C,H,*)
+        # o_t = r_t S_{t-1}^chunk-relative + intra terms
+        # intra strict-lower: sum_{s<t} (r_t * exp(lcum[t-1]-lcum[s]) . k_s) v_s
+        # lcum[t-1] = lcum[t] - w[t]; use exclusive cumsum:
+        lex_i = lc_i - (lc_i - jnp.pad(lc_i[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0))))
+        # lex_i is w_i itself; compute exclusive cumsum directly instead:
+        lexc = jnp.pad(lc_i[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))  # (B,C,H,K)
+
+        rel = lexc[:, :, None] - lc_i[:, None, :]                # (B,t,s,H,K)
+        Cn = r_i.shape[1]
+        mask = jnp.tril(jnp.ones((Cn, Cn), bool), k=-1)          # strict lower
+        rel = jnp.where(mask[None, :, :, None, None], rel, LOG_EPS)
+        att = jnp.einsum("bthk,btshk,bshk->bths",
+                         r_i, jnp.exp(jnp.maximum(rel, LOG_EPS)), k_i)
+        # diagonal (current token, bonus u):
+        diag = jnp.einsum("bthk,hk,bthk->bth", r_i, uf, k_i)
+        o_intra = jnp.einsum("bths,bshv->bthv", att, v_i)
+        o_intra += diag[..., None] * v_i
+        # inter: r_t decayed to chunk start (exclusive) applied to state
+        rdec = r_i * jnp.exp(jnp.maximum(lexc, LOG_EPS))
+        o_inter = jnp.einsum("bthk,bhkv->bthv", rdec, state)
+
+        # state update
+        tot = lc_i[:, -1]                                        # (B,H,K)
+        wall = jnp.exp(jnp.maximum(tot, LOG_EPS))
+        wk = jnp.exp(jnp.maximum(tot[:, None] - lc_i, LOG_EPS)) * k_i  # (B,C,H,K)
+        upd = jnp.einsum("bshk,bshv->bhkv", wk, v_i)
+        state = state * wall[..., None] + upd
+        return state, o_intra + o_inter
+
+    state, os_ = jax.lax.scan(body, S0, (rc, kc, vc, lcum))
+    o = _merge_chunks(os_)
+    return o.astype(r.dtype), state
+
+
+def wkv6_decode_step(
+    r: jnp.ndarray,       # (B, H, K)
+    k: jnp.ndarray,       # (B, H, K)
+    v: jnp.ndarray,       # (B, H, V)
+    w: jnp.ndarray,       # (B, H, K) log-decay (<=0)
+    u: jnp.ndarray,       # (H, K)
+    state: jnp.ndarray,   # (B, H, K, V) f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    f32 = jnp.float32
+    rf, kf, vf, wf = (t.astype(f32) for t in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    o = jnp.einsum("bhk,bhkv->bhv", rf, state + u.astype(f32)[None, :, :, None] * kv)
+    state = state * jnp.exp(jnp.maximum(wf, LOG_EPS))[..., None] + kv
+    return o.astype(r.dtype), state
+
+
+def wkv6_reference(r, k, v, w, u, *, initial_state=None):
+    """Naive per-token scan — oracle for tests."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    state = (jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def body(state, inp):
+        r_t, k_t, v_t, w_t = inp
+        o, state = wkv6_decode_step(r_t, k_t, v_t, w_t, u, state)
+        return state, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, os_ = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(os_, 0, 1).astype(r.dtype), state

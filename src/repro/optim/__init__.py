@@ -1,0 +1,27 @@
+from repro.optim.optimizers import (
+    AdamWConfig,
+    SgdConfig,
+    adamw_init,
+    adamw_update,
+    sgd_init,
+    sgd_update,
+    make_optimizer,
+)
+from repro.optim.schedules import (
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+)
+from repro.optim.compression import (
+    topk_compress,
+    topk_decompress,
+    ef_init,
+    ef_compress_update,
+)
+
+__all__ = [
+    "AdamWConfig", "SgdConfig", "adamw_init", "adamw_update",
+    "sgd_init", "sgd_update", "make_optimizer",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+    "topk_compress", "topk_decompress", "ef_init", "ef_compress_update",
+]

@@ -1,0 +1,146 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+State layout is a plain dict of pytrees so the ZeRO-1 sharding rules
+(repro.parallel.sharding.zero1_spec_tree) can be applied leaf-by-leaf: the
+moments carry the FSDP spec even when the parameters are TP-only, which
+makes GSPMD emit exactly one parameter all-gather per step (ZeRO-1).
+
+Moments are kept in f32 regardless of the parameter dtype; the update is
+computed in f32 and cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0            # global-norm clip; 0 disables
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdConfig:
+    lr: float = 1e-2
+    momentum: float = 0.9
+    nesterov: bool = False
+    grad_clip: float = 0.0
+
+
+def _global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree) -> Pytree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, params: Pytree, grads: Pytree,
+                 state: Pytree, lr_scale=1.0) -> Tuple[Pytree, Pytree, Pytree]:
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = _global_norm(grads)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda t3: t3[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t3: t3[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t3: t3[2], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params: Pytree) -> Pytree:
+    return {
+        "mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def sgd_update(cfg: SgdConfig, params: Pytree, grads: Pytree, state: Pytree,
+               lr_scale=1.0) -> Tuple[Pytree, Pytree, Pytree]:
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = _global_norm(grads)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mom):
+        gf = g.astype(jnp.float32)
+        mom_new = cfg.momentum * mom + gf
+        d = gf + cfg.momentum * mom_new if cfg.nesterov else mom_new
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype), mom_new
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state["mom"])
+    new_params = jax.tree_util.tree_map(lambda t2: t2[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mom = jax.tree_util.tree_map(lambda t2: t2[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mom": new_mom, "step": state["step"] + 1}, {"grad_norm": gnorm}
+
+
+def make_optimizer(kind: str, **kw) -> Tuple[Callable, Callable, Any]:
+    """(init_fn, update_fn(cfg,...), cfg) triple by name."""
+    if kind == "adamw":
+        cfg = AdamWConfig(**kw)
+        return adamw_init, adamw_update, cfg
+    if kind == "sgd":
+        cfg = SgdConfig(**kw)
+        return sgd_init, sgd_update, cfg
+    raise ValueError(f"unknown optimizer {kind!r}")

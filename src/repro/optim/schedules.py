@@ -1,0 +1,32 @@
+"""Learning-rate schedules as jit-safe step -> scale callables.
+
+Schedules return a *multiplier* on the optimizer's base lr so the same
+optimizer config can be reused across schedules.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def cosine_decay(total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return final_frac + (1.0 - final_frac) * cos
+    return f
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm,
+                         cos(step - warmup_steps))
+    return f

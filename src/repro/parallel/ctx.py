@@ -1,0 +1,41 @@
+"""Activation-sharding context.
+
+The model code is mesh-agnostic: it calls ``constrain(x, kind)`` at the
+points where a sharding hint helps the SPMD partitioner (residual stream,
+attention heads, logits).  The launch layer installs a rule set mapping
+``kind`` -> PartitionSpec; outside a rule context the call is a no-op, so
+tests and single-device runs never touch the mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, "jax.sharding.PartitionSpec"]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, "jax.sharding.PartitionSpec"]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, kind: str):
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.get(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

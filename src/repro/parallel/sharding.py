@@ -1,0 +1,303 @@
+"""Sharding rules: pytree path -> PartitionSpec, for every arch family.
+
+The production mesh is fixed by the launch layer: ``(16, 16)`` with axes
+``("data", "model")`` per pod, and ``(2, 16, 16)`` with ``("pod", "data",
+"model")`` across pods.  This module owns the mapping from parameter /
+activation / cache pytrees onto those axes:
+
+* **Parameters** — Megatron tensor parallelism over ``"model"``: column-
+  parallel in-projections (attention QKV, MLP up/gate, MoE experts' up/gate,
+  Mamba in_proj, RWKV r/k/v/g and channel-mix up), row-parallel
+  out-projections (attention O, MLP down, ...).  The sharded axis is always
+  the *flat* feature axis (H*hd, d_ff), which is divisible by 16/32 for
+  every assigned config — head counts are not (40, 28, 24 heads), see
+  DESIGN.md §6.
+* **FSDP** (``cfg.fsdp``) — weights additionally sharded over the data axes
+  on the other matrix dimension (always d_model-like, divisible for all
+  configs).  GSPMD then emits the per-layer all-gather / reduce-scatter
+  stream inside the layer scan: ZeRO-3 semantics without manual gathers.
+* **ZeRO-1** — optimizer moments use the FSDP spec even when parameters do
+  not: the Adam update computes on data-sharded moments and GSPMD inserts
+  exactly one parameter all-gather per step.
+* **KV caches** — decode caches shard the *sequence-slot* axis over
+  ``"model"`` (heads would need KV % 16 == 0, which GQA configs break).
+  Probe-verified: a cache-slot DUS write lowers to two tiny all-gathers and
+  decode attention's softmax lowers to three small all-reduces — the cache
+  itself never moves.
+* **ADMM consensus state** — per-worker parameter copies are *stacked* on a
+  leading worker axis mapped to the data axes; the consensus mean over that
+  axis is the ICI/DCN all-reduce that replaces the paper's ZMQ master tree
+  (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ("pod", "data") on a multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _dp(mesh: Mesh):
+    ax = dp_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+# matrix-leaf classification: name -> role over the trailing (in, out) axes
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "wr", "wg", "wck"}
+_ROW = {"wo", "w_down", "w_out", "wcv"}
+_REP_MAT = {"wcr", "lora_a", "lora_b", "router", "conv_w"}
+
+
+def _leaf_role(path: Tuple[str, ...]) -> str:
+    """Classify a leaf by its pytree path (innermost matrix name wins)."""
+    names = [p for p in path]
+    leaf = names[-1]
+    if leaf in ("w", "b"):
+        owner = names[-2] if len(names) > 1 else ""
+        if owner in _COL:
+            return "col" if leaf == "w" else "col_bias"
+        if owner in _ROW:
+            return "row" if leaf == "w" else "rep"
+        if owner in _REP_MAT:
+            return "rep"
+        return "rep"
+    if leaf in _COL:          # moe leaves are bare arrays, not {"w": ...}
+        return "col"
+    if leaf in _ROW:
+        return "row"
+    if leaf == "embed":
+        return "embed"
+    if leaf == "head":
+        return "head"
+    return "rep"
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    out = []
+    for k in kp:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(k.name)
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _divisible(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def param_spec_tree(cfg: ModelConfig, params_shapes: Pytree, mesh: Mesh,
+                    *, fsdp: Optional[bool] = None,
+                    worker_axes: Tuple[str, ...] = ()) -> Pytree:
+    """PartitionSpec pytree matching ``params_shapes`` (ShapeDtypeStructs).
+
+    ``worker_axes``: axes consumed by a leading stacked-worker dimension
+    (ADMM consensus state) — they are excluded from FSDP use and the spec
+    gets the worker axis prepended by the caller, not here.
+    """
+    use_fsdp = cfg.fsdp if fsdp is None else fsdp
+    free_dp = tuple(a for a in dp_axes(mesh) if a not in worker_axes)
+    dp = free_dp if len(free_dp) > 1 else (free_dp[0] if free_dp else None)
+    dpsz = math.prod(mesh.shape[a] for a in free_dp) if free_dp else 0
+
+    def spec_of(kp, leaf) -> P:
+        names = _path_names(kp)
+        role = _leaf_role(names)
+        shape = leaf.shape
+        nd = len(shape)
+
+        def pad(trailing: Sequence) -> P:
+            return P(*([None] * (nd - len(trailing)) + list(trailing)))
+
+        if role == "col":
+            tr = [None, "model"]
+            if use_fsdp and dp and _divisible(shape[-2], dpsz):
+                tr[0] = dp
+            return pad(tr)
+        if role == "row":
+            tr = ["model", None]
+            if use_fsdp and dp and _divisible(shape[-1], dpsz):
+                tr[1] = dp
+            return pad(tr)
+        if role == "col_bias":
+            return pad(["model"])
+        if role == "embed":
+            # (V, d): d over model (local row lookup, then one all-gather)
+            tr = [None, "model"]
+            if use_fsdp and dp and _divisible(shape[0], dpsz):
+                tr[0] = dp
+            return P(*tr)
+        if role == "head":
+            # (V, d): vocab-parallel logits (no collective in the matmul)
+            tr = ["model", None]
+            if use_fsdp and dp and _divisible(shape[1], dpsz):
+                tr[1] = dp
+            return P(*tr)
+        # replicated (norm scales, biases, mu mixes, conv, lora, router, ...)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shapes)
+
+
+def zero1_spec_tree(cfg: ModelConfig, params_shapes: Pytree, mesh: Mesh,
+                    *, worker_axes: Tuple[str, ...] = ()) -> Pytree:
+    """Optimizer-moment specs: FSDP sharding (ZeRO-1) + dp-shard the
+    replicated leaves on their first dp-divisible axis."""
+    base = param_spec_tree(cfg, params_shapes, mesh, fsdp=True,
+                           worker_axes=worker_axes)
+    free_dp = tuple(a for a in dp_axes(mesh) if a not in worker_axes)
+    dp = free_dp if len(free_dp) > 1 else (free_dp[0] if free_dp else None)
+    dpsz = math.prod(mesh.shape[a] for a in free_dp) if free_dp else 0
+
+    def upgrade(spec: P, leaf) -> P:
+        if not dp or any(s is not None for s in spec):
+            return spec
+        shape = leaf.shape
+        parts = list(spec)
+        for i in range(len(shape) - 1, -1, -1):    # prefer trailing axes
+            if _divisible(shape[i], dpsz):
+                parts[i] = dp
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(upgrade, base, params_shapes)
+
+
+def stacked_spec_tree(spec_tree: Pytree, worker_axes: Tuple[str, ...]) -> Pytree:
+    """Prepend the ADMM worker axis to every leaf spec (stacked copies)."""
+    w = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    return jax.tree_util.tree_map(lambda s: P(w, *s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation rules (repro.parallel.ctx)
+# ---------------------------------------------------------------------------
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh,
+                     global_batch: Optional[int] = None) -> Dict[str, P]:
+    dp = _dp(mesh)
+    if global_batch is not None and not _divisible(global_batch, dp_size(mesh)):
+        dp = None        # e.g. long_500k's batch of 1: replicate batch dims
+    rules = {
+        "btd": P(dp, None, None),
+        "btv": P(dp, None, "model"),
+    }
+    eff_heads = cfg.attn_head_pad or cfg.n_heads
+    if eff_heads and _divisible(eff_heads, model_size(mesh)):
+        rules["bshd"] = P(dp, None, "model", None)
+    if cfg.n_experts and cfg.moe_slot_sharding:
+        # routed slot buffers (E, cap, d): shard the capacity axis so the
+        # expert compute is slot-local and the post-expert reduction is
+        # 1/16th the slot buffer (§Perf H4; many-small-expert MoEs only)
+        rules["moe_slots"] = P(None, "model", None)
+    # else: omit — GSPMD propagates from the flat-axis weight sharding
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec_tree(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh
+                    ) -> Dict[str, P]:
+    """Shard the leading batch axis over the data axes when divisible
+    (long_500k has global_batch=1 -> replicated)."""
+    dp = _dp(mesh)
+    dpsz = dp_size(mesh)
+
+    def one(s: jax.ShapeDtypeStruct) -> P:
+        lead = dp if _divisible(s.shape[0], dpsz) else None
+        return P(lead, *([None] * (len(s.shape) - 1)))
+
+    return {k: one(v) for k, v in specs.items()}
+
+
+# cache leaf name -> index of the sequence-slot axis / head axis, per family
+def cache_spec_tree(cfg: ModelConfig, cache_shapes: Pytree, mesh: Mesh
+                    ) -> Pytree:
+    """Decode-cache specs: batch over data axes, slots/state over model.
+
+    Layouts (repro.models.model.init_cache):
+      dense/moe/audio : k/v        (L, B, S, KV, hd)       -> S over model
+      vlm             : k/v        (G, n, B, S, KV, hd)    -> S over model
+                        k_img/v_img(G, B, T_img, KV, hd)   -> replicated tail
+      hybrid          : ssm        (L, B, nh, hd, N)       -> nh over model
+                        conv       (L, B, 3, conv_dim)     -> conv_dim over model
+                        attn_k/v   (G, B, S, KV, hd)       -> S over model
+      ssm (rwkv)      : wkv        (L, B, H, hd, hd)       -> H over model
+                        shift_t/c  (L, B, d)               -> d over model
+    """
+    dp = _dp(mesh)
+    dpsz = dp_size(mesh)
+    msz = model_size(mesh)
+
+    # per-leaf: (batch axis index, model-sharded axis index or None)
+    layout = {
+        "k": (-4, -3) if cfg.family != "vlm" else (-4, -3),
+        "v": (-4, -3),
+        "k_img": (-4, None),
+        "v_img": (-4, None),
+        "attn_k": (-4, -3),
+        "attn_v": (-4, -3),
+        "ssm": (-4, -3),
+        "conv": (-3, -1),
+        "wkv": (-4, -3),
+        "shift_t": (-2, -1),
+        "shift_c": (-2, -1),
+    }
+
+    def spec_of(kp, leaf) -> P:
+        name = _path_names(kp)[-1]
+        b_ax, m_ax = layout[name]
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if _divisible(leaf.shape[b_ax], dpsz):
+            parts[b_ax % nd] = dp
+        if m_ax is not None and _divisible(leaf.shape[m_ax], msz):
+            parts[m_ax % nd] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# NamedSharding materialisation
+# ---------------------------------------------------------------------------
+
+
+def to_named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

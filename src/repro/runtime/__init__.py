@@ -1,0 +1,12 @@
+from repro.runtime.pool import LambdaPool, PoolConfig, SimWorker
+from repro.runtime.scheduler import (
+    LogRegProblem,
+    RoundMetrics,
+    Scheduler,
+    SchedulerConfig,
+)
+
+__all__ = [
+    "LambdaPool", "PoolConfig", "SimWorker",
+    "LogRegProblem", "Scheduler", "SchedulerConfig", "RoundMetrics",
+]

@@ -1,0 +1,505 @@
+"""Algorithm 1 (the paper's scheduler), event-driven, with the extensions
+the paper leaves as future work.
+
+The scheduler orchestrates a ``LambdaPool`` of simulated serverless workers
+running REAL ADMM math (repro.core.admm) on real shards.  Per round it
+reproduces the paper's measurement set (idle / compute / delay per worker,
+cold starts, responsiveness) and supports:
+
+  * ``sync``         — full barrier (the paper's setting);
+  * ``drop_slowest`` — K-of-W partial barrier: the slowest fraction's fresh
+                       updates are not waited for; their LAST ω stays in the
+                       master's running table, so the average remains over
+                       all W workers (a stale-cache partial barrier — the
+                       dual-consistent version of "discard the stragglers",
+                       which the paper warns biases generic optimization);
+  * ``replicated``   — FRS-style worker replication (repro.core.coding):
+                       r workers per shard group, first responder wins;
+                       tolerates r-1 stragglers/failures with EXACT math;
+  * ``async_``       — bounded-staleness async ADMM (Zhang & Kwok '14 /
+                       Chang et al. '16): the master updates z every S
+                       arrivals; a worker whose z is older than
+                       ``staleness_bound`` versions blocks until rebroadcast.
+
+Elasticity: workers hitting their Lambda lifetime (or killed by failure
+injection) are respawned with a cold start; the replacement regenerates its
+shard deterministically (data is a pure function of (seed, shard)); the
+algorithm state a replacement needs — (z, rho, k) and its OWN (x, u) — is
+exactly what ``repro.checkpoint`` persists, so mid-run worker replacement
+and full restarts share one mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, NamedTuple, Optional, Protocol, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm
+from repro.core.admm import AdmmOptions, WorkerState
+from repro.core.fista import FistaOptions
+from repro.runtime.pool import LambdaPool, PoolConfig, master_drain
+
+
+class WorkerProblem(Protocol):
+    """The per-worker subproblem: the scheduler is workload-agnostic."""
+
+    n_features: int
+
+    def n_samples(self, wid: int, n_workers: int) -> int: ...
+
+    def solve(self, wid: int, n_workers: int, x0: jnp.ndarray,
+              z: jnp.ndarray, u: jnp.ndarray, rho: float
+              ) -> Tuple[jnp.ndarray, int]:
+        """argmin_x f_w(x) + rho/2 ||x - (z - u)||^2 from x0.
+        Returns (x_new, real inner-iteration count)."""
+        ...
+
+    def prox_h(self, v: jnp.ndarray, t: float) -> jnp.ndarray: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    n_workers: int = 16
+    mode: str = "sync"            # sync | drop_slowest | replicated | async_
+    drop_frac: float = 0.1        # drop_slowest: fraction not waited for
+    replication: int = 2          # replicated: r
+    async_batch: int = 4          # async_: S arrivals per z-update
+    staleness_bound: int = 4      # async_: max z-version lag
+    admm: AdmmOptions = AdmmOptions()
+    pool: PoolConfig = PoolConfig()
+    respawn_before_deadline_s: float = 30.0
+    # timing: use the round-median inner-iteration count per worker.  At
+    # paper scale (N_w ~ 1e4 iid rows) per-round FISTA counts concentrate;
+    # reduced benchmark instances replicate that concentration this way.
+    iter_smoothing: bool = False
+    checkpoint_every: int = 0     # rounds; 0 = off
+    checkpoint_dir: Optional[str] = None
+
+
+class RoundMetrics(NamedTuple):
+    k: int
+    sim_time: float              # sim clock at end of round
+    r_norm: float
+    s_norm: float
+    rho: float
+    t_comp: np.ndarray           # (W,) per-worker compute time
+    t_comm: np.ndarray           # (W,)
+    t_idle: np.ndarray           # (W,) comm + scheduler processing
+    inner_iters: np.ndarray      # (W,)
+    n_respawns: int
+    slowest10: np.ndarray        # (W,) bool — in the slowest 10% this round
+
+
+class Scheduler:
+    def __init__(self, problem: WorkerProblem, cfg: SchedulerConfig):
+        self.problem = problem
+        self.cfg = cfg
+        self.pool = LambdaPool(cfg.pool)
+        W, d = cfg.n_workers, problem.n_features
+        dt = getattr(problem, "dtype", jnp.float32)
+        # replicated mode: W physical slots host W/r LOGICAL workers; the r
+        # replicas of a logical worker solve the SAME shard (deterministic
+        # FISTA -> identical results), so first-responder-wins is exact
+        # under any r-1 stragglers/failures (repro.core.coding semantics).
+        self.repl = cfg.replication if cfg.mode == "replicated" else 1
+        if W % self.repl:
+            raise ValueError("replicated mode needs r | W")
+        self.n_logical = W // self.repl
+        WL = self.n_logical
+        self.x = jnp.zeros((WL, d), dt)
+        self.u = jnp.zeros((WL, d), dt)
+        self.z = jnp.zeros((d,), dt)
+        self.z_prev = jnp.zeros((d,), dt)
+        self.omega_table = jnp.zeros((WL, d), dt)          # last ω per slot
+        self.q_table = np.zeros((WL,), np.float64)
+        self.rho = cfg.admm.rho0
+        self.k = 0
+        self.sim_time = 0.0
+        self.history: List[RoundMetrics] = []
+        self.n_respawns = 0
+
+        # message size: the paper sends (q, ω) — d+1 f32
+        self.msg_bytes = 4 * (d + 1)
+        self.pool.spawn_bulk(list(range(W)), at=0.0)
+        self.sim_time = max(w.ready_at for w in self.pool.workers.values())
+        self.cold_starts = {w.wid: w.cold_start_s
+                            for w in self.pool.workers.values()}
+
+    def _logical(self, wid: int) -> int:
+        return wid // self.repl
+
+    # ------------------------------------------------------------------
+    def _maybe_respawn(self, wid: int) -> float:
+        """Returns extra delay if slot wid had to be respawned this round."""
+        w = self.pool.workers[wid]
+        dead = (self.sim_time > w.deadline
+                - self.cfg.respawn_before_deadline_s
+                or self.pool.roll_failure())
+        if not dead:
+            return 0.0
+        self.pool.spawn_bulk([wid], at=self.sim_time)
+        self.n_respawns += 1
+        # the replacement regenerates its shard and reloads (z, rho, x, u):
+        # x,u live in self.x/self.u (checkpointed state), so nothing is lost
+        return self.pool.workers[wid].cold_start_s
+
+    def _worker_pass(self, wid: int) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                              float, int, float]:
+        """One Algorithm-2 body for physical slot wid: returns (omega, q,
+        t_comp, inner_iters, extra_delay).  In replicated mode the r slots
+        of a group solve the same LOGICAL subproblem (same shard, same
+        x/u -> identical deterministic result)."""
+        lw = self._logical(wid)
+        WL = self.n_logical
+        extra = self._maybe_respawn(wid)
+        if lw not in self._round_results:
+            r = self.x[lw] - self.z
+            u_new = self.u[lw] + r
+            q = float(jnp.vdot(r, r))
+            x_new, iters = self.problem.solve(
+                lw, WL, self.x[lw], self.z, u_new, self.rho)
+            self._round_results[lw] = (x_new + u_new, q, iters, x_new, u_new)
+        omega, q, iters, _, _ = self._round_results[lw]
+        return omega, q, iters, extra
+
+    def _commit_xu(self, lw: int):
+        _, _, _, x_new, u_new = self._round_results[lw]
+        self.x = self.x.at[lw].set(x_new)
+        self.u = self.u.at[lw].set(u_new)
+
+    def _master_z_update(self, omega_bar: jnp.ndarray, q_sum: float,
+                         n_eff: int):
+        z_new = self.problem.prox_h(omega_bar, 1.0 / (n_eff * self.rho))
+        r_norm = float(np.sqrt(q_sum))
+        # dual residual: Boyd's consensus form s = rho*sqrt(W)*||dz|| (the
+        # stacked-problem dual residual).  The paper's Algorithm 1 prints
+        # s = rho*||dz||; we keep Boyd's normalization — it balances the
+        # rho-adaptation correctly (the paper-literal form overshoots rho
+        # and stalls the dual residual; EXPERIMENTS.md §Paper).
+        s_norm = float(self.rho * jnp.linalg.norm(z_new - self.z)
+                       * np.sqrt(n_eff))
+        self.z_prev, self.z = self.z, z_new
+        rho_old = self.rho
+        self.rho = float(admm.new_penalty(
+            jnp.float32(self.rho), r_norm, s_norm, self.cfg.admm))
+        if self.rho != rho_old:
+            # broadcast of the new penalty: workers rescale their scaled
+            # duals u = y/rho (Boyd §3.4.1; see core.admm.new_penalty)
+            self.u = self.u * (rho_old / self.rho)
+        return r_norm, s_norm
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> RoundMetrics:
+        """One synchronous-family round (sync / drop_slowest / replicated)."""
+        cfg = self.cfg
+        W = cfg.n_workers
+        t_comp = np.zeros(W)
+        t_comm = np.zeros(W)
+        inner = np.zeros(W, np.int64)
+        round_start = self.sim_time
+        self._round_results: Dict[int, Tuple] = {}
+
+        fresh: Dict[int, Tuple[jnp.ndarray, float]] = {}
+        extras = np.zeros(W)
+        for wid in range(W):
+            omega, q, it, extra = self._worker_pass(wid)
+            inner[wid] = it
+            extras[wid] = extra
+            fresh[wid] = (omega, q)
+
+        timing_iters = inner.copy()
+        if cfg.iter_smoothing:
+            timing_iters[:] = max(int(np.median(inner)), 1)
+        arrivals = []
+        for wid in range(W):
+            lw = self._logical(wid)
+            tc = self.pool.compute_time(
+                self.pool.workers[wid], int(timing_iters[wid]),
+                self.problem.n_samples(lw, self.n_logical))
+            comm = self.pool.comm_time(self.msg_bytes)
+            t_comp[wid] = tc
+            t_comm[wid] = 2 * comm                     # rx z + tx ω
+            arrivals.append((round_start + extras[wid] + comm + tc + comm,
+                             wid))
+
+        # -- which messages does the master wait for? -----------------------
+        if cfg.mode == "drop_slowest":
+            n_wait = W - int(cfg.drop_frac * W)
+            waited = sorted(arrivals)[:n_wait]
+        elif cfg.mode == "replicated":
+            # first responder per FRS group (replicas are exact copies)
+            waited, seen = [], set()
+            for t, wid in sorted(arrivals):
+                g = self._logical(wid)
+                if g not in seen:
+                    seen.add(g)
+                    waited.append((t, wid))
+        else:
+            waited = sorted(arrivals)
+
+        # update the running ω table (stale-cache semantics: unwaited slots
+        # keep their previous ω, so the mean stays over all workers); local
+        # x/u always advance — the paper's workers keep computing even when
+        # the master does not wait for them
+        for _, wid in waited:
+            om, q = fresh[wid]
+            lw = self._logical(wid)
+            self.omega_table = self.omega_table.at[lw].set(om)
+            self.q_table[lw] = q
+        for lw in self._round_results:
+            self._commit_xu(lw)
+
+        # -- scheduler fan-in timing (Fig 5 cliff) --------------------------
+        n_masters = -(-W // cfg.pool.workers_per_master)
+        done = master_drain(waited, n_masters, cfg.pool.t_master_proc_s,
+                            cfg.pool.t_ingest_s)
+        master_done = max(done.values())
+
+        omega_bar = jnp.mean(self.omega_table, axis=0)
+        q_sum = float(self.q_table.sum())
+        r_norm, s_norm = self._master_z_update(omega_bar, q_sum,
+                                               self.n_logical)
+
+        bcast = self.pool.comm_time(4 * self.problem.n_features)
+        self.sim_time = master_done + bcast
+        t_idle = (self.sim_time - round_start) - t_comp
+        self.k += 1
+
+        thresh = np.quantile([t for t, _ in arrivals], 0.9)
+        m = RoundMetrics(
+            k=self.k, sim_time=self.sim_time, r_norm=r_norm, s_norm=s_norm,
+            rho=self.rho, t_comp=t_comp, t_comm=t_comm, t_idle=t_idle,
+            inner_iters=inner, n_respawns=self.n_respawns,
+            slowest10=np.array([t >= thresh for t, _ in arrivals]))
+        self.history.append(m)
+        return m
+
+    # ------------------------------------------------------------------
+    def run_async(self, max_updates: int) -> List[RoundMetrics]:
+        """Bounded-staleness async ADMM: master updates z every
+        ``async_batch`` arrivals; workers beyond ``staleness_bound`` block."""
+        cfg = self.cfg
+        W = cfg.n_workers
+        z_version = 0
+        worker_version = np.zeros(W, np.int64)
+        pending: List[Tuple[float, int]] = []      # (arrival time, wid)
+        since_update = 0
+
+        def launch(wid: int, at: float):
+            self._round_results = {}
+            omega, q, it, extra = self._worker_pass(wid)
+            self._commit_xu(self._logical(wid))
+            lw = self._logical(wid)
+            tc = self.pool.compute_time(
+                self.pool.workers[wid], it,
+                self.problem.n_samples(lw, self.n_logical))
+            comm = self.pool.comm_time(self.msg_bytes)
+            arrive = at + extra + comm + tc + comm
+            heapq.heappush(pending, (arrive, wid, float(q)))
+            self._async_omega[wid] = omega
+            self._async_tcomp[wid] = tc
+            self._async_iters[wid] = it
+
+        self._async_omega: Dict[int, jnp.ndarray] = {}
+        self._async_tcomp: Dict[int, float] = {}
+        self._async_iters: Dict[int, int] = {}
+        blocked: List[int] = []
+
+        for wid in range(W):
+            launch(wid, self.pool.workers[wid].ready_at)
+
+        updates = 0
+        while updates < max_updates and pending:
+            arrive, wid, q = heapq.heappop(pending)
+            self.sim_time = max(self.sim_time, arrive)
+            self.omega_table = self.omega_table.at[wid].set(
+                self._async_omega[wid])
+            self.q_table[wid] = q
+            since_update += 1
+
+            if since_update >= cfg.async_batch:
+                since_update = 0
+                omega_bar = jnp.mean(self.omega_table, axis=0)
+                r_norm, s_norm = self._master_z_update(
+                    omega_bar, float(self.q_table.sum()), W)
+                z_version += 1
+                updates += 1
+                self.k += 1
+                t_comp = np.array([self._async_tcomp.get(i, 0.0)
+                                   for i in range(W)])
+                m = RoundMetrics(
+                    k=self.k, sim_time=self.sim_time, r_norm=r_norm,
+                    s_norm=s_norm, rho=self.rho, t_comp=t_comp,
+                    t_comm=np.zeros(W), t_idle=np.zeros(W),
+                    inner_iters=np.array([self._async_iters.get(i, 0)
+                                          for i in range(W)]),
+                    n_respawns=self.n_respawns,
+                    slowest10=np.zeros(W, bool))
+                self.history.append(m)
+                # unblock stale workers
+                for bw in list(blocked):
+                    if z_version - worker_version[bw] <= cfg.staleness_bound:
+                        blocked.remove(bw)
+                        worker_version[bw] = z_version
+                        launch(bw, self.sim_time)
+
+            # relaunch this worker against the current z
+            if z_version - worker_version[wid] > cfg.staleness_bound:
+                blocked.append(wid)
+            else:
+                worker_version[wid] = z_version
+                launch(wid, max(arrive, self.sim_time))
+        return self.history
+
+    # ------------------------------------------------------------------
+    def solve(self, *, max_rounds: Optional[int] = None,
+              on_round: Optional[Callable] = None) -> jnp.ndarray:
+        cfg = self.cfg
+        K = max_rounds or cfg.admm.max_iters
+        if cfg.mode == "async_":
+            self.run_async(K)
+            return self.z
+        for _ in range(K):
+            m = self.run_round()
+            if on_round:
+                on_round(m)
+            if (m.r_norm <= cfg.admm.eps_primal
+                    and m.s_norm <= cfg.admm.eps_dual):
+                break
+        return self.z
+
+    # -- elastic rescale ----------------------------------------------------
+    def rescale(self, new_w: int):
+        """Change the worker count mid-run (the paper's elasticity claim).
+
+        Data re-sharding is free (pure regeneration); x/u are re-seeded from
+        the consensus z — warm restarts keep ADMM convergent (z is the
+        authoritative state; per-worker duals restart at 0)."""
+        d = self.problem.n_features
+        if new_w % self.repl:
+            raise ValueError("new worker count must keep r | W")
+        self.cfg = dataclasses.replace(self.cfg, n_workers=new_w)
+        self.n_logical = new_w // self.repl
+        WL = self.n_logical
+        dt = getattr(self.problem, "dtype", jnp.float32)
+        self.x = jnp.broadcast_to(self.z, (WL, d)).astype(dt)
+        self.u = jnp.zeros((WL, d), dt)
+        self.omega_table = jnp.broadcast_to(self.z, (WL, d)).astype(dt).copy()
+        self.q_table = np.zeros((WL,), np.float64)
+        self.pool.spawn_bulk(list(range(new_w)), at=self.sim_time)
+        self.sim_time = max(w.ready_at for w in self.pool.workers.values())
+
+
+# ---------------------------------------------------------------------------
+# The paper's workload as a WorkerProblem
+# ---------------------------------------------------------------------------
+
+
+class LogRegProblem:
+    """l1-logistic regression on sparse Koh-Kim-Boyd shards (Section III)."""
+
+    def __init__(self, logreg_cfg, *, fista: FistaOptions = FistaOptions(),
+                 fixed_inner: Optional[int] = None, dtype=jnp.float32):
+        from repro.configs.logreg_paper import LogRegConfig  # noqa
+        from repro.data import logreg as data_mod
+        self.cfg = logreg_cfg
+        self.fista = fista
+        self.fixed_inner = fixed_inner
+        self.dtype = dtype            # f64 reproduces the paper's absolute
+                                      # tolerances; f32 hits a precision
+                                      # floor near r ~ 1e-1 (EXPERIMENTS.md)
+        self.n_features = logreg_cfg.n_features
+        self._data = data_mod
+        self._shard_cache: Dict[Tuple[int, int], Tuple] = {}
+        self._solver_cache: Dict[Tuple[int, int], Callable] = {}
+
+    def n_samples(self, wid: int, n_workers: int) -> int:
+        lo, hi = self._data.shard_rows(self.cfg.n_samples, n_workers, wid)
+        return hi - lo
+
+    def _shard(self, wid: int, W: int):
+        key = (wid, W)
+        if key not in self._shard_cache:
+            idx, vals, b = self._load_or_gen(wid, W)
+            self._shard_cache[key] = (idx, vals.astype(self.dtype),
+                                      b.astype(self.dtype))
+        return self._shard_cache[key]
+
+    def _load_or_gen(self, wid: int, W: int):
+        """Disk-cache the generated shards (generation of the full paper
+        instance costs ~3 min; reruns should not pay it again)."""
+        import os
+        import numpy as np
+        c = self.cfg
+        cache_dir = os.environ.get("REPRO_DATA_CACHE", "")
+        if not cache_dir:
+            return self._data.worker_shard_sparse(c, wid, W)
+        os.makedirs(cache_dir, exist_ok=True)
+        tag = (f"logreg_n{c.n_samples}_d{c.n_features}_p{c.density}"
+               f"_s{c.seed}_w{wid}of{W}.npz")
+        path = os.path.join(cache_dir, tag)
+        if os.path.exists(path):
+            with np.load(path) as z:
+                return (jnp.asarray(z["idx"]), jnp.asarray(z["vals"]),
+                        jnp.asarray(z["b"]))
+        idx, vals, b = self._data.worker_shard_sparse(c, wid, W)
+        np.savez(path, idx=np.asarray(idx), vals=np.asarray(vals),
+                 b=np.asarray(b))
+        return idx, vals, b
+
+    def _solver(self, shard_shape: Tuple[int, int]) -> Callable:
+        """One jitted FISTA per shard shape (rho etc. are traced args, so
+        the adaptive penalty does NOT retrace)."""
+        if shard_shape not in self._solver_cache:
+            d = self.cfg.n_features
+            fista_opts = self.fista
+            fixed = self.fixed_inner
+            from repro.core import fista as fista_mod
+
+            @jax.jit
+            def run(idx, vals, b, x0, z, u, rho):
+                vg = self._data.sparse_logistic_value_and_grad(
+                    idx, vals, b, d)
+                center = z - u
+
+                def aug(x):
+                    f, g = vg(x)
+                    dx = x - center
+                    return f + 0.5 * rho * jnp.vdot(dx, dx), g + rho * dx
+
+                if fixed is not None:
+                    x_new, info = fista_mod.fista_fixed(aug, x0, fixed,
+                                                        fista_opts)
+                else:
+                    x_new, info = fista_mod.fista(aug, x0, fista_opts)
+                return x_new, info.k
+
+            self._solver_cache[shard_shape] = run
+        return self._solver_cache[shard_shape]
+
+    def solve(self, wid, n_workers, x0, z, u, rho):
+        idx, vals, b = self._shard(wid, n_workers)
+        run = self._solver(idx.shape)
+        x_new, k = run(idx, vals, b, x0, z, u,
+                       jnp.asarray(rho, self.dtype))
+        return x_new, int(k)
+
+    def prox_h(self, v, t):
+        from repro.core import prox
+        return prox.prox_l1(v, t, self.cfg.lam1)
+
+    def objective(self, x, n_workers: int) -> float:
+        """Full phi(x) for convergence reporting."""
+        total = self.cfg.lam1 * float(jnp.sum(jnp.abs(x)))
+        for w in range(n_workers):
+            idx, vals, b = self._shard(w, n_workers)
+            vg = self._data.sparse_logistic_value_and_grad(
+                idx, vals, b, self.cfg.n_features)
+            f, _ = vg(x)
+            total += float(f)
+        return total

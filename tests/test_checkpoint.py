@@ -1,0 +1,86 @@
+"""Checkpoint store: roundtrip, integrity, rotation, async save."""
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "step": jnp.int32(7),
+        "nested": [jnp.arange(4), {"deep": jnp.ones((2, 2))}],
+    }
+
+
+def _same(a, b):
+    return all(bool(jnp.array_equal(x, y)) and x.dtype == y.dtype
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def test_roundtrip_identity(tmp_path):
+    s = _state()
+    ck.save(s, tmp_path, 3, {"note": "x"})
+    restored, meta = ck.restore(s, tmp_path)
+    assert _same(s, restored)
+    assert meta == {"note": "x"}
+
+
+def test_latest_step_and_multiple(tmp_path):
+    s = _state()
+    for step in (1, 5, 3):
+        ck.save(s, tmp_path, step)
+    assert ck.latest_step(tmp_path) == 5
+    _, _ = ck.restore(s, tmp_path, step=3)
+
+
+def test_corruption_detected(tmp_path):
+    s = _state()
+    path = ck.save(s, tmp_path, 1)
+    # flip a byte in the arrays file
+    f = path / "arrays.npz"
+    data = bytearray(f.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    f.write_bytes(bytes(data))
+    with pytest.raises(Exception):
+        ck.restore(s, tmp_path)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    s = _state()
+    ck.save(s, tmp_path, 1)
+    with pytest.raises(ValueError):
+        ck.restore({"just_one": jnp.zeros(3)}, tmp_path)
+
+
+def test_rotation(tmp_path):
+    mgr = ck.CheckpointManager(tmp_path, keep_last=2)
+    s = _state()
+    for step in range(5):
+        mgr.save(s, step)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+    assert steps == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = ck.CheckpointManager(tmp_path, async_save=True)
+    s = _state()
+    mgr.save(s, 1)
+    mgr.wait()
+    restored, _ = mgr.restore_latest(s)
+    assert _same(s, restored)
+
+
+def test_atomicity_tmpdir_never_visible(tmp_path):
+    s = _state()
+    ck.save(s, tmp_path, 9)
+    assert not any(p.name.endswith(".tmp") for p in tmp_path.iterdir())

@@ -1,0 +1,59 @@
+"""Gradient coding (Tandon et al.): exact recovery properties."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding
+
+
+def _grads(rng, W, d=16):
+    return jnp.asarray(rng.randn(W, d).astype(np.float32))
+
+
+@pytest.mark.parametrize("scheme", ["frs", "cyclic"])
+@pytest.mark.parametrize("W,r", [(4, 2), (8, 2), (8, 4), (12, 3)])
+def test_exact_recovery_all_straggler_sets(rng, scheme, W, r):
+    B = (coding.frs_matrix(W, r) if scheme == "frs"
+         else coding.cyclic_matrix(W, r))
+    g = _grads(rng, W)
+    msgs = coding.encode(B, g)
+    total = g.sum(0)
+    s = r - 1
+    # FRS decodes with 0/1 coefficients (exact in f32); cyclic coefficients
+    # come from a solve, so f32 roundoff scales with cond(B)
+    tol = dict(rtol=2e-4, atol=2e-4) if scheme == "frs" else \
+        dict(rtol=2e-2, atol=2e-3)
+    for drop in itertools.combinations(range(W), s):
+        resp = np.array([i for i in range(W) if i not in drop])
+        rec = coding.decode(B, resp, msgs[resp])
+        np.testing.assert_allclose(rec, total, **tol)
+
+
+def test_frs_whole_group_loss_fails(rng):
+    """Losing every replica of one group is not recoverable — decode must
+    refuse rather than silently return a wrong sum."""
+    W, r = 8, 2
+    B = coding.frs_matrix(W, r)
+    g = _grads(rng, W)
+    msgs = coding.encode(B, g)
+    resp = np.array([i for i in range(W) if i not in (0, 1)])  # group 0 gone
+    with pytest.raises(ValueError):
+        coding.decode(B, resp, msgs[resp])
+
+
+@given(st.integers(2, 4).flatmap(
+    lambda r: st.tuples(st.just(r), st.integers(1, 3).map(lambda k: r * k))))
+@settings(max_examples=20, deadline=None)
+def test_frs_matrix_structure(r_w):
+    r, W = r_w
+    B = coding.frs_matrix(W, r)
+    # every shard covered exactly r times; every worker holds r shards
+    assert (B.sum(0) == r).all()
+    assert (B.sum(1) == r).all()
+
+
+def test_max_stragglers():
+    assert coding.max_stragglers(3) == 2

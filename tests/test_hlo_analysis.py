@@ -1,0 +1,81 @@
+"""HLO walker: trip-count-aware FLOPs/bytes/collectives (probe-verified)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_scan_flops_exact():
+    L, D = 7, 64
+    def f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+    xs = jax.ShapeDtypeStruct((32, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    comp = jax.jit(f).lower(xs, ws).compile()
+    st = H.analyze_module(comp.as_text())
+    assert st["flops_per_chip"] == pytest.approx(2 * 32 * D * D * L, rel=1e-6)
+    assert st["unknown_trip_loops"] == 0
+
+
+def test_nested_scan_multiplies():
+    L, M, D = 3, 4, 32
+    def f(x, ws):
+        def outer(x, wrow):
+            def inner(x, w):
+                return jnp.tanh(x @ w), None
+            return jax.lax.scan(inner, x, wrow)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+    xs = jax.ShapeDtypeStruct((16, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, M, D, D), jnp.float32)
+    comp = jax.jit(f).lower(xs, ws).compile()
+    st = H.analyze_module(comp.as_text())
+    assert st["flops_per_chip"] == pytest.approx(2 * 16 * D * D * L * M,
+                                                 rel=1e-6)
+
+
+def test_shape_bytes_parsing():
+    assert H._shape_bytes("f32[4,8]{1,0}") == 128
+    assert H._shape_bytes("bf16[10]") == 20
+    assert H._shape_bytes("(f32[2], s32[3])") == 20
+    assert H._shape_bytes("f32[]") == 4
+    assert H._shape_bytes("pred[7]") == 7
+
+
+def test_link_bytes_ring_formulas():
+    T, n = 1024, 16
+    assert H._link_bytes("all-reduce", T, n) == pytest.approx(2 * T * 15 / 16)
+    assert H._link_bytes("all-gather", T, n) == pytest.approx(T * 15 / 16)
+    assert H._link_bytes("reduce-scatter", T, n) == pytest.approx(T * 15)
+    assert H._link_bytes("collective-permute", T, n) == T
+    assert H._link_bytes("all-reduce", T, 1) == 0.0
+
+
+def test_group_size_parsing():
+    assert H._group_size("replica_groups=[16,16]<=[256]") == 16
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+
+
+def test_crosses_pod():
+    # contiguous groups of 16 within 512 devices never cross the 256 line
+    assert not H._crosses_pod("replica_groups=[32,16]<=[512]", 256)
+    # groups spanning halves (pairs with stride 256)
+    assert H._crosses_pod("replica_groups={{0,256},{1,257}}", 256)
+    # full 512 group crosses
+    assert H._crosses_pod("replica_groups=[1,512]<=[512]", 256)
+
+
+def test_unknown_trip_flagged():
+    def f(x):
+        def cond(c):
+            return jnp.sum(c) < 100.0
+        def body(c):
+            return c * 1.1
+        return jax.lax.while_loop(cond, body, x)
+    xs = jax.ShapeDtypeStruct((8,), jnp.float32)
+    comp = jax.jit(f).lower(xs).compile()
+    st = H.analyze_module(comp.as_text())
+    assert st["unknown_trip_loops"] >= 1

@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles, interpret=True, shape/dtype sweeps."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import logreg as logreg_mod
+from repro.kernels import decode_attention as dec_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import logistic_vjp as lv_k
+from repro.kernels import ref
+from repro.kernels import soft_threshold as st_k
+
+
+def _rand(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.randn(*shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# logistic_vjp
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,block", [(256, 128, 256), (512, 256, 256),
+                                       (1024, 128, 512)])
+def test_logistic_vjp_sweep(rng, n, d, block):
+    a = _rand(rng, (n, d), scale=0.3)
+    b = jnp.asarray(np.sign(rng.randn(n, 1)), jnp.float32)
+    mask = jnp.ones((n, 1), jnp.float32)
+    x = _rand(rng, (1, d), scale=0.1)
+    loss_k, grad_k = lv_k.logistic_vjp_pallas(a, b, mask, x,
+                                              block_rows=block,
+                                              interpret=True)
+    loss_r, grad_r = ref.logistic_vjp_ref(a, b, mask, x)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=2e-5)
+    np.testing.assert_allclose(grad_k, grad_r, rtol=2e-4, atol=2e-4)
+
+
+def test_logistic_vjp_padding_mask(rng):
+    """Masked (padding) rows contribute nothing."""
+    a = _rand(rng, (256, 128), scale=0.3)
+    b = jnp.asarray(np.sign(rng.randn(256, 1)), jnp.float32)
+    mask = jnp.zeros((256, 1), jnp.float32).at[:100].set(1.0)
+    x = _rand(rng, (1, 128), scale=0.1)
+    loss_k, grad_k = lv_k.logistic_vjp_pallas(a, b, mask, x, block_rows=256,
+                                              interpret=True)
+    loss_r, grad_r = ref.logistic_vjp_ref(a[:100], b[:100],
+                                          jnp.ones((100, 1)), x)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=2e-5)
+    np.testing.assert_allclose(grad_k, grad_r, rtol=2e-4, atol=2e-4)
+
+
+def test_ops_wrapper_matches_data_oracle(rng, monkeypatch):
+    """ops.fused_logistic_vjp == data.logreg closed form on odd shapes."""
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    from repro.kernels import ops
+    A = _rand(rng, (111, 70), scale=0.3)
+    b = jnp.asarray(np.sign(rng.randn(111)), jnp.float32)
+    x = _rand(rng, (70,), scale=0.1)
+    f_k, g_k = ops.fused_logistic_vjp(A, b, x)
+    f_r, g_r = logreg_mod.logistic_value_and_grad(A, b)(x)
+    np.testing.assert_allclose(f_k, f_r, rtol=2e-5)
+    np.testing.assert_allclose(g_k, g_r, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# soft_threshold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [128, 512, 1024])
+def test_soft_threshold_sweep(rng, d):
+    omega = _rand(rng, (1, d))
+    z_old = _rand(rng, (1, d))
+    thr = jnp.asarray([[0.37]], jnp.float32)
+    out_k = st_k.soft_threshold_pallas(omega, z_old, thr, interpret=True)
+    out_r = ref.soft_threshold_ref(omega, z_old, thr)
+    for k_arr, r_arr in zip(out_k, out_r):
+        np.testing.assert_allclose(k_arr, r_arr, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,window", [
+    (1, 256, 4, 4, 64, None),
+    (2, 256, 4, 2, 64, None),        # GQA
+    (1, 512, 2, 2, 64, 128),         # sliding window
+    (1, 256, 8, 1, 64, None),        # MQA
+])
+def test_flash_attention_sweep(rng, B, S, H, KV, hd, window):
+    q = _rand(rng, (B, S, H, hd), jnp.float32, 0.5)
+    k = _rand(rng, (B, S, KV, hd), jnp.float32, 0.5)
+    v = _rand(rng, (B, S, KV, hd), jnp.float32, 0.5)
+    G = H // KV
+    qr = (q.reshape(B, S, KV, G, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(B * KV, G * S, hd))
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    o = fa_k.flash_attention_pallas(qr, kr, vr, seq_q=S, causal=True,
+                                    window=window, block_q=128, block_kv=128,
+                                    interpret=True)
+    o = (o.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4)
+         .reshape(B, S, H, hd))
+    o_ref = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Smax,H,KV,hd", [
+    (2, 512, 4, 4, 64),
+    (2, 512, 8, 2, 64),
+    (1, 1024, 4, 1, 128),
+])
+def test_decode_attention_sweep(rng, B, Smax, H, KV, hd):
+    q = _rand(rng, (B, 1, H, hd), jnp.float32, 0.5)
+    kc = _rand(rng, (B, Smax, KV, hd), jnp.float32, 0.5)
+    vc = _rand(rng, (B, Smax, KV, hd), jnp.float32, 0.5)
+    positions = jnp.asarray([Smax // 3, Smax - 1][:B], jnp.int32)
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd)
+    kr = kc.transpose(0, 2, 1, 3)
+    vr = vc.transpose(0, 2, 1, 3)
+    o = dec_k.decode_attention_pallas(qr, kr, vr, positions, block_s=128,
+                                      interpret=True)
+    o = o.reshape(B, 1, H, hd)
+    o_ref = ref.decode_attention_ref(q, kc, vc, positions)
+    np.testing.assert_allclose(o, o_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_block_attention_matches_naive(rng):
+    """The jnp flash-style sweep (the model's attention) vs naive oracle."""
+    from repro.models import attention as attn
+    B, S, H, KV, hd = 2, 128, 4, 2, 32
+    q = _rand(rng, (B, S, H, hd), jnp.float32, 0.5)
+    k = _rand(rng, (B, S, KV, hd), jnp.float32, 0.5)
+    v = _rand(rng, (B, S, KV, hd), jnp.float32, 0.5)
+    for window in (None, 48):
+        got = attn.block_attention(q, k, v, causal=True, window=window,
+                                   chunk=32)
+        want = attn.naive_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

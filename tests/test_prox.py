@@ -1,0 +1,72 @@
+"""Prox-operator library: closed forms + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prox
+
+vecs = st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=32).map(lambda l: jnp.asarray(l, jnp.float32))
+pos = st.floats(1e-3, 10.0)
+
+
+def test_soft_threshold_closed_form():
+    a = jnp.asarray([-3.0, -1.0, -0.5, 0.0, 0.5, 1.0, 3.0])
+    out = prox.soft_threshold(a, 1.0)
+    np.testing.assert_allclose(out, [-2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0],
+                               atol=1e-7)
+
+
+def test_prox_l1_is_argmin():
+    # check prox definition numerically on a grid
+    v, t, lam = 1.3, 0.7, 2.0
+    zs = np.linspace(-3, 3, 20001)
+    obj = lam * np.abs(zs) + (zs - v) ** 2 / (2 * t)
+    z_star = zs[np.argmin(obj)]
+    got = float(prox.prox_l1(jnp.float32(v), t, lam))
+    assert abs(got - z_star) < 1e-3
+
+
+def test_prox_l2sq_scaling():
+    v = jnp.asarray([2.0, -4.0])
+    np.testing.assert_allclose(prox.prox_l2sq(v, 0.5, 2.0), v / 2.0)
+
+
+def test_prox_elastic_net_composes():
+    v = jnp.asarray([3.0, -0.1])
+    en = prox.prox_elastic_net(v, 1.0, lam1=1.0, lam2=1.0)
+    manual = prox.prox_l2sq(prox.soft_threshold(v, 1.0), 1.0, 1.0)
+    np.testing.assert_allclose(en, manual)
+
+
+def test_prox_box_projects():
+    v = jnp.asarray([-1.0, 0.5, 2.0])
+    np.testing.assert_allclose(prox.prox_box(v, 1.0, 0.0, 1.0),
+                               [0.0, 0.5, 1.0])
+
+
+@given(vecs, pos)
+@settings(max_examples=50, deadline=None)
+def test_soft_threshold_shrinks_magnitudes(v, b):
+    out = prox.soft_threshold(v, b)
+    assert bool(jnp.all(jnp.abs(out) <= jnp.abs(v) + 1e-6))
+    # sign preservation
+    assert bool(jnp.all((out == 0) | (jnp.sign(out) == jnp.sign(v))))
+
+
+@given(vecs, vecs, pos)
+@settings(max_examples=50, deadline=None)
+def test_prox_l1_nonexpansive(u, v, t):
+    n = min(u.shape[0], v.shape[0])
+    u, v = u[:n], v[:n]
+    pu, pv = prox.prox_l1(u, t), prox.prox_l1(v, t)
+    assert float(jnp.linalg.norm(pu - pv)) <= float(
+        jnp.linalg.norm(u - v)) + 1e-5
+
+
+@given(vecs, pos, pos)
+@settings(max_examples=50, deadline=None)
+def test_soft_threshold_sparsifies(v, t, lam):
+    out = prox.prox_l1(v, t, lam)
+    assert bool(jnp.all((jnp.abs(v) > lam * t) | (out == 0.0)))

@@ -1,0 +1,103 @@
+"""LM consensus trainer: learning + consensus invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import trainer as T
+from repro.data import lm as lm_data
+from repro.optim import optimizers as opt_mod
+
+CFG = reduced(get_config("stablelm_3b"), vocab_size=128)
+SHAPE = ShapeConfig("t", 16, 8, "train")
+
+
+def _wbatch(step, W=4):
+    gb = lm_data.batch_for(CFG, SHAPE, step)
+    return {k: v.reshape((W, SHAPE.global_batch // W) + v.shape[1:])
+            for k, v in gb.items()}
+
+
+@pytest.fixture(scope="module")
+def ccfg():
+    return T.ConsensusConfig(
+        n_workers=4, local_steps=2, rho0=0.01,
+        optimizer=opt_mod.AdamWConfig(lr=2e-3, weight_decay=0.0))
+
+
+def test_consensus_round_reduces_loss(ccfg):
+    state = T.init_state(jax.random.PRNGKey(0), CFG, ccfg)
+    step = jax.jit(T.make_round_step(CFG, ccfg))
+    losses = []
+    for k in range(6):
+        state, m = step(state, _wbatch(k))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_z_is_prox_of_mean(ccfg):
+    """After a round with prox=none, z == mean_w(x + u) exactly."""
+    state = T.init_state(jax.random.PRNGKey(1), CFG, ccfg)
+    step = jax.jit(T.make_round_step(CFG, ccfg))
+    state, _ = step(state, _wbatch(0))
+    for zl, xl, ul in zip(jax.tree_util.tree_leaves(state.z),
+                          jax.tree_util.tree_leaves(state.x),
+                          jax.tree_util.tree_leaves(state.u)):
+        mean = jnp.mean(xl.astype(jnp.float32) + ul, axis=0)
+        np.testing.assert_allclose(np.asarray(zl, np.float32),
+                                   np.asarray(mean, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_l1_prox_sparsifies_consensus():
+    ccfg = T.ConsensusConfig(
+        n_workers=2, local_steps=1, rho0=0.5, prox="l1", lam=5e-2,
+        adapt_rho=False,
+        optimizer=opt_mod.AdamWConfig(lr=1e-3, weight_decay=0.0))
+    state = T.init_state(jax.random.PRNGKey(2), CFG, ccfg)
+    step = jax.jit(T.make_round_step(CFG, ccfg))
+    for k in range(3):
+        state, _ = step(state, _wbatch(k, W=2))
+    total = nz = 0
+    for zl in jax.tree_util.tree_leaves(state.z):
+        total += zl.size
+        nz += int(jnp.sum(zl == 0))
+    assert nz / total > 0.05, "l1 consensus should zero some weights"
+
+
+def test_rho_adaptation_rescales_duals():
+    ccfg = T.ConsensusConfig(
+        n_workers=2, local_steps=1, rho0=0.01, mu=1.01, tau=2.0,
+        optimizer=opt_mod.AdamWConfig(lr=1e-3, weight_decay=0.0))
+    state = T.init_state(jax.random.PRNGKey(3), CFG, ccfg)
+    step = jax.jit(T.make_round_step(CFG, ccfg))
+    state1, m1 = step(state, _wbatch(0, W=2))
+    # mu=1.01 makes rho move nearly every round
+    state2, m2 = step(state1, _wbatch(1, W=2))
+    assert float(m2["rho"]) != ccfg.rho0 or float(m1["rho"]) != ccfg.rho0
+
+
+def test_sgd_step_learns():
+    from repro.models import model as M
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    opt = opt_mod.adamw_init(params)
+    step = jax.jit(T.make_sgd_step(
+        CFG, T.SgdTrainConfig(opt_mod.AdamWConfig(lr=2e-3))))
+    losses = []
+    for k in range(6):
+        batch = lm_data.batch_for(CFG, SHAPE, k)
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = opt_mod.clip_by_global_norm(g, 1.0)
+    assert float(jnp.linalg.norm(clipped["a"])) <= 1.0 + 1e-5
+    assert float(norm) > 100.0
