@@ -1,21 +1,26 @@
 """§V system-level bottleneck: d >= 80 000 makes comm ~ compute.
 
-Two parts:
- 1. the alpha-beta wire model: round comm time for dense vs top-k+EF
-    messages across decision-vector sizes (the paper's observation that at
-    d=10k comm is negligible and at d>=80k it rivals compute);
- 2. convergence check: consensus ADMM with top-k error-feedback compressed
-    ω-messages still converges on a real instance (beyond-paper feature).
+Three parts:
+ 1. the alpha-beta wire model: round comm time for dense vs top-k+EF vs
+    QSGD messages across decision-vector sizes (the paper's observation
+    that at d=10k comm is negligible and at d>=80k it rivals compute);
+ 2. convergence check: consensus ADMM with compressed ω-messages (the
+    codecs now integrated in the scheduler, repro.optim.compression.
+    OmegaCodec) still converges on a real instance — the lossy ω is what
+    the master averages, so the objective gap below is MEASURED;
+ 3. fan-in interaction: per-round comm+fan-in time for the {flat,tree} x
+    {none,topk,qsgd} grid at the paper's message size (the full
+    efficiency sweep lives in benchmarks/fig4_speedup.py --sweep).
 """
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import emit
+from benchmarks.fig4_speedup import PAPER_D
 from repro.configs.logreg_paper import scaled
 from repro.core.admm import AdmmOptions
 from repro.core.fista import FistaOptions
 from repro.optim import compression as C
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
+from repro.runtime import PoolConfig, Scheduler, SchedulerConfig, TreeConfig
 from repro.runtime.scheduler import LogRegProblem
 
 
@@ -24,76 +29,81 @@ def wire_model():
     t_compute = 2.0          # paper-regime per-round compute at W=64
     rows = {}
     for d in (10_000, 80_000, 1_000_000):
-        dense_b, comp_b = C.wire_bytes(d, max(d // 100, 1))
+        dense_b = C.message_bytes("none", d)
+        topk_b = C.message_bytes("topk", d, topk_frac=0.01)
+        qsgd_b = C.message_bytes("qsgd", d, qsgd_bits=4)
         t_dense = pool.comm_alpha_s + dense_b * pool.comm_beta_s_per_byte
-        t_comp_msg = pool.comm_alpha_s + comp_b * pool.comm_beta_s_per_byte
+        t_topk = pool.comm_alpha_s + topk_b * pool.comm_beta_s_per_byte
+        t_qsgd = pool.comm_alpha_s + qsgd_b * pool.comm_beta_s_per_byte
         rows[d] = {"dense_ms": t_dense * 1e3,
-                   "topk1pct_ms": t_comp_msg * 1e3,
+                   "topk1pct_ms": t_topk * 1e3,
+                   "qsgd4bit_ms": t_qsgd * 1e3,
                    "dense_over_compute": t_dense / t_compute}
         print(f"  d={d:9,d}: dense={t_dense*1e3:8.2f}ms "
-              f"top-1%={t_comp_msg*1e3:7.2f}ms "
+              f"top-1%={t_topk*1e3:7.2f}ms qsgd-4b={t_qsgd*1e3:7.2f}ms "
               f"dense/compute={t_dense/t_compute:.3f}")
     return rows
 
 
-class CompressedLogReg(LogRegProblem):
-    """ω-messages compressed incrementally: each worker sends the top-k of
-    (Δω + carried error) and the master integrates the deltas.  Deltas
-    shrink as ADMM converges, so error feedback stays bounded (compressing
-    raw ω diverges — the state outruns the EF carry; EXPERIMENTS.md)."""
-
-    def __init__(self, cfg, k_frac=0.05, **kw):
-        super().__init__(cfg, **kw)
-        self.k = max(int(cfg.n_features * k_frac), 1)
-        self._sent = {}          # master's view of each worker's ω
-
-    def compress_omega(self, wid, omega):
-        # EF-style state sync: send top-k of (ω - master's view); the
-        # tracked difference IS the error carry (adding a second error
-        # accumulator double-counts the residual and diverges)
-        sent = self._sent.get(wid, jnp.zeros_like(omega))
-        delta_hat, _ = C.topk_compress(omega - sent, self.k)
-        self._sent[wid] = sent + delta_hat
-        return self._sent[wid]
-
-
 def convergence_check():
+    """Dense vs compressed consensus through the REAL scheduler path: the
+    ω the master averages is the codec's lossy view (delta-EF sync), so
+    the objective gap is a measurement, not a bound."""
     cfg = scaled(8_000, 512, density=0.02)
     W, rounds = 8, 40
+    prob = LogRegProblem(cfg, fista=FistaOptions(min_iters=1))
 
-    def run(problem, compress):
-        sched = Scheduler(problem, SchedulerConfig(
+    out = {}
+    for method in ("none", "topk", "qsgd"):
+        sched = Scheduler(prob, SchedulerConfig(
             n_workers=W, admm=AdmmOptions(max_iters=rounds),
+            compress=method, topk_frac=0.05, qsgd_bits=4,
             pool=PoolConfig(seed=0)))
-        if compress:
-            orig = sched._worker_pass
-
-            def patched(wid):
-                omega, q, it, extra = orig(wid)
-                return (problem.compress_omega(wid, omega), q, it, extra)
-            sched._worker_pass = patched
         z = sched.solve(max_rounds=rounds)
-        return problem.objective(z, W), sched.history[-1].r_norm
+        out[method] = {"obj": prob.objective(z, W),
+                       "r_norm": sched.history[-1].r_norm,
+                       "msg_bytes": sched.msg_bytes}
+        ratio = out["none"]["msg_bytes"] / out[method]["msg_bytes"]
+        print(f"  {method:5s}: obj={out[method]['obj']:10.3f} "
+              f"r={out[method]['r_norm']:.4f} "
+              f"msg={out[method]['msg_bytes']:5d}B ({ratio:.0f}x less)")
+    base = out["none"]["obj"]
+    for method in ("topk", "qsgd"):
+        out[method]["obj_gap_pct"] = 100 * (out[method]["obj"] - base) / base
+    return out
 
-    dense_prob = LogRegProblem(cfg, fista=FistaOptions(min_iters=1))
-    comp_prob = CompressedLogReg(cfg, k_frac=0.05,
-                                 fista=FistaOptions(min_iters=1))
-    obj_d, r_d = run(dense_prob, False)
-    obj_c, r_c = run(comp_prob, True)
-    print(f"  dense:       obj={obj_d:10.3f} r={r_d:.4f}")
-    print(f"  top-5% + EF: obj={obj_c:10.3f} r={r_c:.4f} "
-          f"(20x less consensus traffic)")
-    return {"dense_obj": obj_d, "compressed_obj": obj_c,
-            "dense_r": r_d, "compressed_r": r_c,
-            "obj_gap_pct": 100 * (obj_c - obj_d) / obj_d}
+
+def fanin_comm_model():
+    """Per-round fan-in + wire cost at the paper's message size for the
+    {flat,tree} x {none,topk,qsgd} grid, W=256 simultaneous arrivals —
+    the timing kernel behind the Fig 5 recovery (no ADMM math, instant).
+    Uses the scheduler's own dispatch (reduce.fanin_drain)."""
+    from repro.runtime.pool import LambdaPool
+    from repro.runtime.reduce import fanin_drain
+
+    pool = LambdaPool(PoolConfig())
+    W = 256
+    rows = {}
+    for fanin in ("flat", "tree"):
+        for method in ("none", "topk", "qsgd"):
+            b = C.message_bytes(method, PAPER_D)
+            arrivals = [(0.0, i) for i in range(W)]
+            done = fanin_drain(arrivals, fanin, pool, TreeConfig(), b, W)
+            rows[f"{fanin}/{method}"] = {"drain_s": done, "msg_bytes": b}
+            print(f"  {fanin}/{method:5s}: W={W} drain={done:6.3f}s "
+                  f"msg={b:6d}B")
+    return rows
 
 
 def main():
     print("[compression] alpha-beta wire model (paper §V)")
     rows = wire_model()
-    print("[compression] compressed-consensus convergence")
+    print("[compression] compressed-consensus convergence (integrated codec)")
     conv = convergence_check()
-    emit("bench_compression", {"wire_model": rows, "convergence": conv})
+    print("[compression] fan-in drain x codec grid (W=256, paper d)")
+    fan = fanin_comm_model()
+    emit("bench_compression", {"wire_model": rows, "convergence": conv,
+                               "fanin_drain": fan})
 
 
 if __name__ == "__main__":

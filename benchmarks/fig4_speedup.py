@@ -1,4 +1,5 @@
-"""Figs. 4/5/9 — speedup & efficiency vs W, utilization, responsiveness.
+"""Figs. 4/5/9 — speedup & efficiency vs W, utilization, responsiveness —
+plus the §V fix: hierarchical compressed fan-in vs the W=256 cliff.
 
 One W-sweep feeds all three figures (the paper measures them on the same
 runs).  The ADMM math runs for real on a reduced instance; the TIMING model
@@ -6,6 +7,21 @@ uses the PAPER's per-worker shard sizes (N=600k/W samples) through the
 calibrated pool constants, reproducing the paper's anchors:
   * relative speedup up to W=256 (~17x vs W=4),
   * efficiency ~74% at W=64, dropping to ~26% at W=256 (scheduler fan-in).
+
+Fan-in modes (the paper's "proposed improvements", §V):
+
+  python benchmarks/fig4_speedup.py                      # paper baseline
+  python benchmarks/fig4_speedup.py --fanin tree --compress topk
+  python benchmarks/fig4_speedup.py --sweep              # full grid
+                                                         # {flat,tree} x
+                                                         # {none,topk,qsgd}
+
+``--fanin tree`` routes ω-messages through the k-ary aggregator tree
+(repro.runtime.reduce) instead of the single serial router;
+``--compress`` turns on ω-codec compression (repro.optim.compression).
+The tree+topk combination recovers >70% efficiency at W=256, where the
+flat baseline collapses to ~26%.  ``--paper-scale`` extends sweeps to
+W=1024 (several CPU-minutes).
 """
 import argparse
 import time
@@ -16,7 +32,7 @@ from benchmarks.common import emit
 from repro.configs.logreg_paper import scaled
 from repro.core.admm import AdmmOptions
 from repro.core.fista import FistaOptions
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
+from repro.runtime import PoolConfig, Scheduler, SchedulerConfig, TreeConfig
 from repro.runtime.scheduler import LogRegProblem
 
 PAPER_N = 600_000
@@ -32,7 +48,8 @@ class PaperScaleTiming(LogRegProblem):
         return hi - lo
 
 
-def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0):
+def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0,
+              fanin: str = "flat", compress: str = "none"):
     cfg = scaled(24_000, 500, density=0.02)
     fi = dict(fixed_inner=50) if uniform else {}
     prob = PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1), **fi)
@@ -41,6 +58,8 @@ def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0):
         sched = Scheduler(prob, SchedulerConfig(
             n_workers=W, admm=AdmmOptions(max_iters=rounds),
             iter_smoothing=True,
+            fanin=fanin, tree=TreeConfig(), compress=compress,
+            wire_d=PAPER_D,        # messages at the paper's d, like N_w
             pool=PoolConfig(seed=seed)))
         t0 = time.time()
         sched.solve(max_rounds=rounds)
@@ -56,6 +75,8 @@ def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0):
             "idle_std": float(np.mean([m.t_idle.std() for m in hist])),
             "slowest10_frac": np.stack(
                 [m.slowest10 for m in hist]).mean(0).tolist(),
+            "r_norm": float(hist[-1].r_norm),
+            "msg_bytes": sched.msg_bytes,
             "wall_s": time.time() - t0,
         }
         print(f"  W={W:4d} round={t_round:7.3f}s comp={out[W]['comp_mean']:6.3f}s "
@@ -63,17 +84,57 @@ def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0):
     return out
 
 
-def main(paper_scale: bool = False):
-    ws = [4, 8, 16, 32, 64, 128, 256] if paper_scale else [4, 8, 16, 32, 64]
+def add_efficiency(sweep, ws):
+    """Paper definition: S(W) = t(4)/t(W), E(W) = S(W)/(W/4)."""
+    base = sweep[4]["sim_round_s"]
+    for W in ws:
+        s = base / sweep[W]["sim_round_s"]
+        sweep[W]["speedup_vs_4"] = s
+        sweep[W]["efficiency"] = s / (W / 4)
+    return sweep
+
+
+def fanin_sweep(args):
+    """The §V improvements grid: W x {flat,tree} x {none,topk,qsgd}."""
+    ws = [4, 64, 256] + ([1024] if args.paper_scale else [])
+    if args.sweep:
+        grid = [(f, c) for f in ("flat", "tree")
+                for c in ("none", "topk", "qsgd")]
+    else:
+        grid = [(args.fanin or "flat", args.compress or "none")]
+    results = {}
+    for fanin, compress in grid:
+        label = f"{fanin}/{compress}"
+        print(f"[fig5-fix] {label} sweep W={ws} ({args.rounds} rounds)")
+        sweep = add_efficiency(
+            run_sweep(ws, uniform=False, rounds=args.rounds,
+                      fanin=fanin, compress=compress), ws)
+        results[label] = sweep
+
+    hdr = "  ".join(f"E(W={W:4d})" for W in ws if W > 4)
+    print(f"\n[fig5-fix] efficiency table (paper Fig 5: flat/none "
+          f"E(64)=0.74, E(256)=0.26)\n  {'config':<12} {hdr}")
+    for label, sweep in results.items():
+        row = "  ".join(f"{sweep[W]['efficiency']:8.2f}"
+                        for W in ws if W > 4)
+        print(f"  {label:<12} {row}")
+    for label, sweep in results.items():
+        if 256 in sweep and label.startswith("tree"):
+            e = sweep[256]["efficiency"]
+            mark = "OK (>= 0.70)" if e >= 0.70 else "BELOW TARGET"
+            print(f"[fig5-fix] {label}: E(256)={e:.2f} {mark}")
+    emit("fig5_fanin_efficiency", results)
+    return results
+
+
+def main(args):
+    if args.fanin or args.compress or args.sweep:
+        return fanin_sweep(args)
+    ws = [4, 8, 16, 32, 64, 128, 256] if args.paper_scale else [4, 8, 16, 32, 64]
     results = {}
     for label, uniform in (("nonuniform", False), ("uniform", True)):
         print(f"[fig4/5/9] {label} load sweep W={ws}")
-        sweep = run_sweep(ws, uniform=uniform)
-        base = sweep[4]["sim_round_s"]
-        for W in ws:
-            s = base / sweep[W]["sim_round_s"]
-            sweep[W]["speedup_vs_4"] = s
-            sweep[W]["efficiency"] = s / (W / 4)
+        sweep = add_efficiency(run_sweep(ws, uniform=uniform), ws)
         results[label] = sweep
         print("  " + "  ".join(
             f"W={W}: S={sweep[W]['speedup_vs_4']:.1f} "
@@ -81,7 +142,7 @@ def main(paper_scale: bool = False):
     emit("fig4_speedup_efficiency", results)
 
     # paper anchors (only checkable at the full sweep)
-    if paper_scale:
+    if args.paper_scale:
         e64 = results["nonuniform"][64]["efficiency"]
         e256 = results["nonuniform"][256]["efficiency"]
         print(f"[fig4] anchors: E(64)={e64:.2f} (paper 0.74), "
@@ -92,5 +153,18 @@ def main(paper_scale: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true",
-                    help="sweep to W=256 (several CPU-minutes)")
-    main(ap.parse_args().paper_scale)
+                    help="extend sweeps: W=256 baseline / W=1024 fan-in "
+                         "(several CPU-minutes)")
+    ap.add_argument("--fanin", choices=["flat", "tree"], default=None,
+                    help="run the fan-in efficiency sweep with this path "
+                         "(omit BOTH --fanin and --compress for the "
+                         "fig4/5/9 baseline run)")
+    ap.add_argument("--compress", choices=["none", "topk", "qsgd"],
+                    default=None,
+                    help="run the fan-in efficiency sweep with this "
+                         "ω-codec (omit for the baseline run)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="full {flat,tree} x {none,topk,qsgd} grid")
+    ap.add_argument("--rounds", type=int, default=16,
+                    help="ADMM rounds per fan-in sweep point")
+    main(ap.parse_args())

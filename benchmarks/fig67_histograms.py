@@ -10,7 +10,7 @@ import argparse
 import numpy as np
 
 from benchmarks.common import emit
-from benchmarks.fig4_speedup import PaperScaleTiming
+from benchmarks.fig4_speedup import PAPER_D, PaperScaleTiming
 from repro.configs.logreg_paper import scaled
 from repro.core.admm import AdmmOptions
 from repro.core.fista import FistaOptions
@@ -23,7 +23,8 @@ def run(W: int, uniform: bool, rounds: int = 12):
     prob = PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1), **fi)
     sched = Scheduler(prob, SchedulerConfig(
         n_workers=W, admm=AdmmOptions(max_iters=rounds),
-        iter_smoothing=True, pool=PoolConfig(seed=0)))
+        iter_smoothing=True, wire_d=PAPER_D,   # messages at the paper's d
+        pool=PoolConfig(seed=0)))
     sched.solve(max_rounds=rounds)
     comp = np.concatenate([m.t_comp for m in sched.history])
     idle = np.concatenate([m.t_idle for m in sched.history])

@@ -1,21 +1,39 @@
-"""Top-k gradient/consensus compression with error feedback.
+"""ω-message compression: top-k and QSGD quantization, with error feedback.
 
 Addresses the paper's system-level bottleneck (§V): "for decision vectors
 with sizes larger than d ≈ 80 000, the communication time will be on par
 with the computation time".  The ADMM consensus message ω = x + u is
-compressed to its top-k coordinates before the worker->master reduce; the
-residual is fed back into the next round's message (error feedback keeps
-the compressed consensus convergent — Stich et al.-style memory).
+compressed before the worker->master reduce; the residual is fed back
+into the next round's message (error feedback keeps the compressed
+consensus convergent — Stich et al.-style memory).
+
+Two codecs:
+
+* **top-k** — keep the k largest-|.| coordinates; wire cost k*(value +
+  index).
+* **QSGD** (Alistarh et al. '17) — max-norm scaled b-bit uniform
+  quantization; wire cost d*b/8 + the scale.  Deterministic
+  nearest-level rounding (the stochastic variant is unbiased but the
+  delta-EF sync below absorbs the bias either way, and determinism keeps
+  the replicated mode's first-responder-wins decode exact).
+
+``OmegaCodec`` is the runtime integration: the scheduler holds one codec
+per fleet, workers transmit the coded DELTA against the master's last
+synchronized view, and the master's (lossy) view is what enters the
+ω-table — so the convergence impact of compression is measured by the
+real ADMM math, not assumed.  Compressing raw ω instead of the delta
+diverges: the state outruns the error carry (EXPERIMENTS.md).
 
 Compression is expressed densely (value * mask) so the all-reduce itself
 moves a dense buffer under SPMD; the *modelled* wire cost (k indices +
-values) is what benchmarks/fig_compress reports.  On a real deployment the
-sparse representation rides the gRPC/DCN path between pods, which is not
-expressible as an XLA collective — DESIGN.md §5.3.
+values) is what the benchmarks and the scheduler's comm clock charge.  On
+a real deployment the sparse representation rides the gRPC/DCN path
+between pods, which is not expressible as an XLA collective — DESIGN.md
+§5.3.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,3 +77,115 @@ def wire_bytes(d: int, k: int, *, dense_bytes_per_elem: int = 4,
                index_bytes: int = 4) -> Tuple[int, int]:
     """(dense message bytes, compressed message bytes) for the cost model."""
     return d * dense_bytes_per_elem, k * (dense_bytes_per_elem + index_bytes)
+
+
+# ---------------------------------------------------------------------------
+# QSGD-style uniform quantization
+# ---------------------------------------------------------------------------
+
+
+def qsgd_compress(x: jnp.ndarray, bits: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(signed integer levels, scale): nearest-level b-bit quantization of
+    x/max|x|.  Levels lie in [-s, s] with s = 2^(b-1) - 1."""
+    s = (1 << (bits - 1)) - 1
+    scale = jnp.max(jnp.abs(x))
+    safe = jnp.where(scale > 0, scale, 1.0)
+    levels = jnp.round(x / safe * s)
+    return levels.astype(jnp.int32), scale
+
+
+def qsgd_decompress(levels: jnp.ndarray, scale: jnp.ndarray,
+                    bits: int) -> jnp.ndarray:
+    s = (1 << (bits - 1)) - 1
+    return levels.astype(jnp.float32) * (scale / s)
+
+
+def qsgd_bytes(d: int, bits: int) -> int:
+    """Wire size of one quantized message: packed levels + f32 scale."""
+    return -(-d * bits // 8) + 4
+
+
+def message_bytes(method: str, d: int, *, topk_frac: float = 0.05,
+                  qsgd_bits: int = 4, topk_k: int = None) -> int:
+    """Worker→master wire size of one (q, ω) message for a d-vector under
+    the given codec, including the f32 scalar q."""
+    if method == "topk":
+        k = topk_k if topk_k is not None else max(int(d * topk_frac), 1)
+        return wire_bytes(d, k)[1] + 4
+    if method == "qsgd":
+        return qsgd_bytes(d, qsgd_bits) + 4
+    if method == "none":
+        return 4 * (d + 1)
+    raise ValueError(f"unknown compression method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration: the fleet codec
+# ---------------------------------------------------------------------------
+
+
+class OmegaCodec:
+    """Stateful codec for a fleet of logical workers.
+
+    Both endpoints track the master's last synchronized view ``sent[lw]``;
+    each round worker lw transmits code(ω - sent[lw]) and both sides apply
+    ``sent[lw] += decode(code)``.  The tracked difference IS the error
+    carry (a second error accumulator double-counts the residual and
+    diverges).  ``encode`` returns the master's updated — lossy — view;
+    that view is what the scheduler averages, so compression's convergence
+    cost shows up in the real residuals.
+    """
+
+    METHODS = ("none", "topk", "qsgd")
+
+    def __init__(self, method: str, d: int, *, topk_frac: float = 0.05,
+                 qsgd_bits: int = 4):
+        if method not in self.METHODS:
+            raise ValueError(f"compress must be one of {self.METHODS}, "
+                             f"got {method!r}")
+        self.method = method
+        self.d = d
+        self.k = max(int(d * topk_frac), 1)
+        self.bits = qsgd_bits
+        self._sent: Dict[int, jnp.ndarray] = {}
+
+    def encode(self, lw: int, omega: jnp.ndarray) -> jnp.ndarray:
+        if self.method == "none":
+            return omega
+        sent = self._sent.get(lw)
+        if sent is None:
+            sent = jnp.zeros_like(omega)
+        delta = omega - sent
+        if self.method == "topk":
+            delta_hat, _ = topk_compress(delta, self.k)
+        else:
+            delta_hat = qsgd_decompress(*qsgd_compress(delta, self.bits),
+                                        self.bits)
+        new = sent + delta_hat
+        self._sent[lw] = new
+        return new
+
+    def snapshot(self) -> Dict[int, jnp.ndarray]:
+        """Shallow copy of the synchronized views (arrays are immutable),
+        for rolling back undelivered messages (partial barriers)."""
+        return dict(self._sent)
+
+    def rollback_except(self, snap: Dict[int, jnp.ndarray],
+                        delivered) -> None:
+        """Restore the pre-round view for every worker NOT in
+        ``delivered``: a message the master never ingested must not
+        advance the shared state, or later deltas would smuggle the
+        dropped content inside a k-sized wire budget."""
+        if self.method == "none":
+            return
+        for lw in list(self._sent):
+            if lw not in delivered:
+                if lw in snap:
+                    self._sent[lw] = snap[lw]
+                else:
+                    del self._sent[lw]
+
+    def reset(self):
+        """Drop synchronized state (elastic rescale re-seeds the fleet)."""
+        self._sent.clear()

@@ -1,4 +1,5 @@
 from repro.runtime.pool import LambdaPool, PoolConfig, SimWorker
+from repro.runtime.reduce import TreeConfig, fanin_drain, tree_drain
 from repro.runtime.scheduler import (
     LogRegProblem,
     RoundMetrics,
@@ -9,4 +10,5 @@ from repro.runtime.scheduler import (
 __all__ = [
     "LambdaPool", "PoolConfig", "SimWorker",
     "LogRegProblem", "Scheduler", "SchedulerConfig", "RoundMetrics",
+    "TreeConfig", "fanin_drain", "tree_drain",
 ]

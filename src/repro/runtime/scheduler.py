@@ -21,6 +21,14 @@ cold starts, responsiveness) and supports:
                        arrivals; a worker whose z is older than
                        ``staleness_bound`` versions blocks until rebroadcast.
 
+Orthogonal to the barrier mode, the fan-in path is switchable
+(``fanin="flat"`` — the paper's single router, Fig 5's cliff — or
+``fanin="tree"`` — hierarchical k-ary aggregation, repro.runtime.reduce)
+and ω-messages can be compressed (``compress="topk"|"qsgd"``,
+repro.optim.compression): compressed bytes shrink the comm clock AND the
+master averages the lossy decoded ω, so the convergence impact is
+measured, not assumed.
+
 Elasticity: workers hitting their Lambda lifetime (or killed by failure
 injection) are respawned with a cold start; the replacement regenerates its
 shard deterministically (data is a pure function of (seed, shard)); the
@@ -42,7 +50,9 @@ import jax.numpy as jnp
 from repro.core import admm
 from repro.core.admm import AdmmOptions, WorkerState
 from repro.core.fista import FistaOptions
-from repro.runtime.pool import LambdaPool, PoolConfig, master_drain
+from repro.optim.compression import OmegaCodec, message_bytes
+from repro.runtime.pool import LambdaPool, PoolConfig
+from repro.runtime.reduce import TreeConfig, fanin_drain
 
 
 class WorkerProblem(Protocol):
@@ -72,6 +82,21 @@ class SchedulerConfig:
     staleness_bound: int = 4      # async_: max z-version lag
     admm: AdmmOptions = AdmmOptions()
     pool: PoolConfig = PoolConfig()
+    # fan-in: "flat" = the paper's single router (master_drain, the Fig 5
+    # cliff); "tree" = hierarchical k-ary aggregation (runtime.reduce)
+    fanin: str = "flat"
+    tree: TreeConfig = TreeConfig()
+    # ω-message compression (repro.optim.compression.OmegaCodec): shrinks
+    # the modelled wire bytes AND lossy-codes the ω the master averages,
+    # so the convergence cost is measured by the real ADMM math
+    compress: str = "none"        # none | topk | qsgd
+    topk_frac: float = 0.05       # topk: fraction of d kept per message
+    qsgd_bits: int = 4            # qsgd: bits per coordinate
+    # decision-vector size for the WIRE/cost model only; defaults to the
+    # problem's n_features.  Benchmarks that solve reduced instances but
+    # model paper-scale timing set this to the paper's d (10 000) so
+    # message sizes match the compute model's scale.
+    wire_d: Optional[int] = None
     respawn_before_deadline_s: float = 30.0
     # timing: use the round-median inner-iteration count per worker.  At
     # paper scale (N_w ~ 1e4 iid rows) per-round FISTA counts concentrate;
@@ -123,8 +148,18 @@ class Scheduler:
         self.history: List[RoundMetrics] = []
         self.n_respawns = 0
 
-        # message size: the paper sends (q, ω) — d+1 f32
-        self.msg_bytes = 4 * (d + 1)
+        if cfg.fanin not in ("flat", "tree"):
+            raise ValueError(f"fanin must be 'flat' or 'tree', "
+                             f"got {cfg.fanin!r}")
+        # message size: the paper sends (q, ω) — d+1 f32 dense; the codec
+        # shrinks it (and lossy-codes the ω the master sees) when
+        # compression is on
+        self.codec = OmegaCodec(cfg.compress, d, topk_frac=cfg.topk_frac,
+                                qsgd_bits=cfg.qsgd_bits)
+        self.wire_d = cfg.wire_d or d
+        self.msg_bytes = message_bytes(cfg.compress, self.wire_d,
+                                       topk_frac=cfg.topk_frac,
+                                       qsgd_bits=cfg.qsgd_bits)
         self.pool.spawn_bulk(list(range(W)), at=0.0)
         self.sim_time = max(w.ready_at for w in self.pool.workers.values())
         self.cold_starts = {w.wid: w.cold_start_s
@@ -163,7 +198,11 @@ class Scheduler:
             q = float(jnp.vdot(r, r))
             x_new, iters = self.problem.solve(
                 lw, WL, self.x[lw], self.z, u_new, self.rho)
-            self._round_results[lw] = (x_new + u_new, q, iters, x_new, u_new)
+            # the master's (possibly lossy) view of ω = x + u: replicas of
+            # a logical worker share one codec slot, so first-responder-
+            # wins stays exact under compression
+            omega = self.codec.encode(lw, x_new + u_new)
+            self._round_results[lw] = (omega, q, iters, x_new, u_new)
         omega, q, iters, _, _ = self._round_results[lw]
         return omega, q, iters, extra
 
@@ -203,6 +242,7 @@ class Scheduler:
         inner = np.zeros(W, np.int64)
         round_start = self.sim_time
         self._round_results: Dict[int, Tuple] = {}
+        codec_snap = self.codec.snapshot()
 
         fresh: Dict[int, Tuple[jnp.ndarray, float]] = {}
         extras = np.zeros(W)
@@ -216,15 +256,17 @@ class Scheduler:
         if cfg.iter_smoothing:
             timing_iters[:] = max(int(np.median(inner)), 1)
         arrivals = []
+        # z is broadcast DENSE (only the ω uplink is compressed)
+        rx = self.pool.comm_time(4 * self.wire_d)
+        tx = self.pool.comm_time(self.msg_bytes)
         for wid in range(W):
             lw = self._logical(wid)
             tc = self.pool.compute_time(
                 self.pool.workers[wid], int(timing_iters[wid]),
                 self.problem.n_samples(lw, self.n_logical))
-            comm = self.pool.comm_time(self.msg_bytes)
             t_comp[wid] = tc
-            t_comm[wid] = 2 * comm                     # rx z + tx ω
-            arrivals.append((round_start + extras[wid] + comm + tc + comm,
+            t_comm[wid] = rx + tx                      # rx z + tx ω
+            arrivals.append((round_start + extras[wid] + rx + tc + tx,
                              wid))
 
         # -- which messages does the master wait for? -----------------------
@@ -245,7 +287,11 @@ class Scheduler:
         # update the running ω table (stale-cache semantics: unwaited slots
         # keep their previous ω, so the mean stays over all workers); local
         # x/u always advance — the paper's workers keep computing even when
-        # the master does not wait for them
+        # the master does not wait for them.  Undelivered messages must
+        # not advance the codec's shared view either (their content rides
+        # in a later delta instead of being smuggled in for free).
+        self.codec.rollback_except(
+            codec_snap, {self._logical(wid) for _, wid in waited})
         for _, wid in waited:
             om, q = fresh[wid]
             lw = self._logical(wid)
@@ -254,18 +300,16 @@ class Scheduler:
         for lw in self._round_results:
             self._commit_xu(lw)
 
-        # -- scheduler fan-in timing (Fig 5 cliff) --------------------------
-        n_masters = -(-W // cfg.pool.workers_per_master)
-        done = master_drain(waited, n_masters, cfg.pool.t_master_proc_s,
-                            cfg.pool.t_ingest_s)
-        master_done = max(done.values())
+        # -- scheduler fan-in timing (Fig 5 cliff vs the tree fix) ----------
+        master_done = fanin_drain(waited, cfg.fanin, self.pool, cfg.tree,
+                                  self.msg_bytes, W)
 
         omega_bar = jnp.mean(self.omega_table, axis=0)
         q_sum = float(self.q_table.sum())
         r_norm, s_norm = self._master_z_update(omega_bar, q_sum,
                                                self.n_logical)
 
-        bcast = self.pool.comm_time(4 * self.problem.n_features)
+        bcast = self.pool.comm_time(4 * self.wire_d)
         self.sim_time = master_done + bcast
         t_idle = (self.sim_time - round_start) - t_comp
         self.k += 1
@@ -298,8 +342,9 @@ class Scheduler:
             tc = self.pool.compute_time(
                 self.pool.workers[wid], it,
                 self.problem.n_samples(lw, self.n_logical))
-            comm = self.pool.comm_time(self.msg_bytes)
-            arrive = at + extra + comm + tc + comm
+            rx = self.pool.comm_time(4 * self.wire_d)   # dense z downlink
+            tx = self.pool.comm_time(self.msg_bytes)    # compressed ω up
+            arrive = at + extra + rx + tc + tx
             heapq.heappush(pending, (arrive, wid, float(q)))
             self._async_omega[wid] = omega
             self._async_tcomp[wid] = tc
@@ -391,6 +436,7 @@ class Scheduler:
         self.u = jnp.zeros((WL, d), dt)
         self.omega_table = jnp.broadcast_to(self.z, (WL, d)).astype(dt).copy()
         self.q_table = np.zeros((WL,), np.float64)
+        self.codec.reset()
         self.pool.spawn_bulk(list(range(new_w)), at=self.sim_time)
         self.sim_time = max(w.ready_at for w in self.pool.workers.values())
 

@@ -1,0 +1,84 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't
+installed (the CI image may not ship it; nothing may be pip-installed at
+test time).
+
+Implements just the surface this suite uses — ``given``, ``settings``,
+``strategies.integers/floats/lists/tuples/just`` plus ``.map`` /
+``.flatmap`` — by drawing ``max_examples`` samples from a seeded RNG and
+running the test once per sample.  Not shrinking, not adversarial: a
+property-based test degrades to a seeded fuzz test.  With real
+hypothesis on the path the tests import it instead (see the try/except
+at each test module's top).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.RandomState):
+        return self._draw(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def flatmap(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)).draw(rng))
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.randint(min_value,
+                                                     max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, **_ignored):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: float(lo + (hi - lo) * rng.rand()))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+
+def given(*strats):
+    """Like hypothesis.given: fills the LAST len(strats) positional params
+    of the test; leading params stay visible to pytest as fixtures."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kw):
+            n = getattr(run, "_max_examples", 10)
+            rng = np.random.RandomState(0)
+            for _ in range(n):
+                fn(*args, *(s.draw(rng) for s in strats), **kw)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        run.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        return run
+    return deco
+
+
+def settings(max_examples=10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # CI image without hypothesis
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import prox
 
