@@ -1,0 +1,175 @@
+"""Cost-vs-time Pareto over {W, keep-alive policy, autoscale mode}.
+
+The paper claims serverless optimization is cost-effective but never
+prices a run; with the provider model (warm keep-alive), the billing
+meter (GB-seconds + requests + egress), and the autoscaler, every
+configuration now lands as a (sim seconds, dollars) point — this
+benchmark sweeps a grid and reports the Pareto front.
+
+All runs solve the same instance to the same residual target, with the
+TIMING model at the paper's per-worker shard sizes (like fig4), so the
+15-minute lifetime is hit naturally mid-run and the respawn waves are
+where the keep-alive policies earn their keep:
+
+* the cold baseline re-pays Fig 8's ~2.5-3.5 s per respawn,
+* warm policies land respawns on the keep-alive pool at ~0.5 s,
+* the autoscaler additionally resizes the fleet toward its efficiency
+  band, trading time for dollars around the Fig 5 knee.
+
+Emits experiments/bench_cost_pareto.json with per-point metrics, the
+Pareto front, and the acceptance checks (warm beats cold on mean start
+latency; the autoscale points are not dominated).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.fig4_speedup import PAPER_D, PaperScaleTiming
+from repro.configs.logreg_paper import scaled
+from repro.core.admm import AdmmOptions
+from repro.core.fista import FistaOptions
+from repro.runtime import (AutoscaleConfig, PoolConfig, ProviderConfig,
+                           Scheduler, SchedulerConfig)
+
+TARGET_R = 0.35          # residual target every run solves to
+MAX_ROUNDS = 36
+# the 15-minute limit, compressed like the instance itself: runs here
+# last a few hundred sim-seconds, so a 240 s lifetime reproduces the
+# paper's several-respawn-waves-per-run regime (the paper's 900 s limit
+# against ~hour-long full-scale runs)
+LIFETIME_S = 240.0
+
+
+def make_problem():
+    cfg = scaled(4096, 192, density=0.05, lam1=0.3)
+    return PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1,
+                                                    eps_grad=1e-3))
+
+
+def run_point(problem, label, W, *, provider=None, autoscale=None, seed=0):
+    scfg = SchedulerConfig(
+        n_workers=W,
+        admm=AdmmOptions(max_iters=MAX_ROUNDS, eps_primal=TARGET_R,
+                         eps_dual=TARGET_R),
+        iter_smoothing=True,
+        wire_d=PAPER_D,
+        autoscale=autoscale or AutoscaleConfig(),
+        pool=PoolConfig(seed=seed, lifetime_s=LIFETIME_S,
+                        provider=provider or ProviderConfig()))
+    t0 = time.time()
+    sched = Scheduler(problem, scfg)
+    sched.solve(max_rounds=MAX_ROUNDS)
+    m = sched.history[-1]
+    stats = sched.pool.provider.stats if sched.pool.provider else None
+    point = {
+        "label": label,
+        "w_start": W,
+        "w_final": sched.cfg.n_workers,
+        "policy": (provider.policy if provider and provider.enabled
+                   else "cold"),
+        "autoscale": (autoscale.policy if autoscale else "off"),
+        "rounds": len(sched.history),
+        "r_norm": float(m.r_norm),
+        "sim_time_s": float(m.sim_time),
+        "cost_usd": float(sched.meter.total_usd()),
+        "cost_breakdown": sched.meter.summary(),
+        "mean_start_latency_s": sched.pool.mean_start_latency(),
+        "warm_frac": sched.pool.warm_frac(),
+        "evictions": stats.evictions if stats else 0,
+        "n_respawns": sched.n_respawns,
+        "rescales": (list(sched.autoscaler.decisions)
+                     if sched.autoscaler else []),
+        "wall_s": time.time() - t0,
+    }
+    print(f"  {label:28s} W={W:3d}->{point['w_final']:3d} "
+          f"rounds={point['rounds']:2d} sim={point['sim_time_s']:8.1f}s "
+          f"cost=${point['cost_usd']:.4f} start={point['mean_start_latency_s']:.2f}s "
+          f"warm={point['warm_frac']:.0%} [{point['wall_s']:.0f}s wall]")
+    return point
+
+
+def pareto_front(points):
+    """Non-dominated on (sim_time_s, cost_usd), minimizing both."""
+    front = []
+    for p in points:
+        dominated = any(
+            q["sim_time_s"] <= p["sim_time_s"]
+            and q["cost_usd"] <= p["cost_usd"]
+            and (q["sim_time_s"] < p["sim_time_s"]
+                 or q["cost_usd"] < p["cost_usd"])
+            for q in points if q is not p)
+        if not dominated:
+            front.append(p["label"])
+    return front
+
+
+def main():
+    problem = make_problem()
+    warm = ProviderConfig(enabled=True)
+    points = []
+    print("[bench_cost] cold baselines")
+    for W in (8, 16, 32):
+        points.append(run_point(problem, f"cold/W={W}", W))
+    print("[bench_cost] warm keep-alive policies")
+    for W in (8, 16, 32):
+        points.append(run_point(problem, f"fixed_ttl/W={W}", W,
+                                provider=warm))
+    # eviction zoo (capacity capped at 8 idle sandboxes for the W=16
+    # fleet).  NOTE: these tie in this scenario — lifetime respawns are
+    # STAGGERED (each worker dies on its own clock and reacquires its
+    # sandbox immediately), so at most a couple of sandboxes sit idle at
+    # once and the capacity never binds.  The policies diverge under
+    # synchronized waves (fig8's warm section) and elastic shrink
+    # (tests/test_provider.py), not steady-state lifetime churn.
+    for policy in ("lru", "least_used", "greedy_dual"):
+        points.append(run_point(
+            problem, f"{policy}/W=16/cap=8", 16,
+            provider=ProviderConfig(enabled=True, policy=policy,
+                                    warm_capacity_mb=8 * 3008)))
+    print("[bench_cost] closed-loop autoscale")
+    points.append(run_point(
+        problem, "autoscale/target_eff", 32, provider=warm,
+        autoscale=AutoscaleConfig(policy="target_efficiency",
+                                  min_workers=4, max_workers=64)))
+    points.append(run_point(
+        problem, "autoscale/queue_depth", 8, provider=warm,
+        autoscale=AutoscaleConfig(policy="queue_depth",
+                                  min_workers=4, max_workers=64)))
+
+    front = pareto_front(points)
+    by_label = {p["label"]: p for p in points}
+
+    # acceptance checks
+    lat_cold = np.mean([by_label[f"cold/W={W}"]["mean_start_latency_s"]
+                        for W in (8, 16, 32)])
+    lat_warm = np.mean([by_label[f"fixed_ttl/W={W}"]["mean_start_latency_s"]
+                        for W in (8, 16, 32)])
+    warm_wins = bool(lat_warm < lat_cold)
+    auto_on_front = [lbl for lbl in front if lbl.startswith("autoscale/")]
+    print(f"\n[bench_cost] Pareto front (time, $): {front}")
+    print(f"[bench_cost] mean start latency: cold {lat_cold:.2f}s vs warm "
+          f"{lat_warm:.2f}s {'OK' if warm_wins else 'REGRESSION'}")
+    print(f"[bench_cost] autoscale on front: {auto_on_front or 'NONE'} "
+          f"{'OK' if auto_on_front else 'BELOW TARGET'}")
+
+    emit("bench_cost_pareto", {
+        "target_r": TARGET_R,
+        "notes": "eviction-zoo points tie: staggered lifetime respawns "
+                 "never pressure warm capacity (policies diverge under "
+                 "synchronized waves / elastic shrink; see fig8 warm "
+                 "section and tests/test_provider.py)",
+        "points": points,
+        "pareto_front": front,
+        "checks": {
+            "warm_beats_cold_start_latency": warm_wins,
+            "cold_mean_start_s": float(lat_cold),
+            "warm_mean_start_s": float(lat_warm),
+            "autoscale_on_front": auto_on_front,
+        },
+    })
+    return points
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ def main(argv=None) -> None:
                     help="run a single benchmark by name")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_admm_vs_sgd, bench_compression,
+    from benchmarks import (bench_admm_vs_sgd, bench_compression, bench_cost,
                             bench_kernels, fig3_convergence, fig4_speedup,
                             fig67_histograms, fig8_coldstart, roofline)
 
@@ -30,9 +30,13 @@ def main(argv=None) -> None:
         ("fig4_speedup", lambda: fig4_speedup.main(paper_scale=args.paper)),
         ("fig67_histograms", lambda: fig67_histograms.main(big=args.paper)),
         ("compression", lambda: bench_compression.main()),
+        ("bench_cost", lambda: bench_cost.main()),
         ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),
         ("roofline", lambda: roofline.main()),
     ]
+    names = [name for name, _ in jobs]
+    if args.only and args.only not in names:
+        ap.error(f"unknown benchmark {args.only!r}; choose from {names}")
     print("name,seconds,status")
     failures = 0
     for name, fn in jobs:

@@ -1,4 +1,7 @@
+from repro.runtime.autoscale import AutoscaleConfig, Autoscaler
+from repro.runtime.billing import BillingConfig, BillingMeter, CostBreakdown
 from repro.runtime.pool import LambdaPool, PoolConfig, SimWorker
+from repro.runtime.provider import Provider, ProviderConfig, WarmContainer
 from repro.runtime.reduce import TreeConfig, fanin_drain, tree_drain
 from repro.runtime.scheduler import (
     LogRegProblem,
@@ -11,4 +14,7 @@ __all__ = [
     "LambdaPool", "PoolConfig", "SimWorker",
     "LogRegProblem", "Scheduler", "SchedulerConfig", "RoundMetrics",
     "TreeConfig", "fanin_drain", "tree_drain",
+    "Provider", "ProviderConfig", "WarmContainer",
+    "BillingConfig", "BillingMeter", "CostBreakdown",
+    "AutoscaleConfig", "Autoscaler",
 ]

@@ -30,6 +30,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.runtime.provider import Provider, ProviderConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
@@ -66,6 +68,11 @@ class PoolConfig:
     lifetime_s: float = 900.0              # Lambda 15-minute limit
     fail_rate_per_round: float = 0.0
     seed: int = 0
+    # provider model (runtime.provider): warm-container keep-alive,
+    # eviction policy, and the account-level cold-spawn throttle.
+    # Disabled by default — the cold-only path is byte-identical to the
+    # seed model (same RNG draw sequence; tests/test_provider.py anchors)
+    provider: ProviderConfig = ProviderConfig()
 
 
 @dataclasses.dataclass
@@ -76,7 +83,11 @@ class SimWorker:
     deadline: float             # sim time of lifetime expiry
     spawned_at: float
     generation: int = 0         # how many times this slot was (re)spawned
-    cold_start_s: float = 0.0
+    cold_start_s: float = 0.0   # start latency (cold OR warm)
+    warm_start: bool = False    # landed on a keep-alive sandbox
+    env_cid: int = -1           # provider sandbox id (-1: provider off)
+    env_created_at: float = 0.0  # when the sandbox was first provisioned
+    env_uses: int = 1           # invocations this sandbox has served
 
 
 class LambdaPool:
@@ -87,6 +98,11 @@ class LambdaPool:
         self.rng = np.random.RandomState(cfg.seed)
         self.workers: Dict[int, SimWorker] = {}
         self.total_spawns = 0
+        self.provider = (Provider(cfg.provider, cold_base_s=cfg.cold_base_s)
+                         if cfg.provider.enabled else None)
+        # (start latency, was_warm) per spawn — benchmarks/bench_cost reads
+        # this for the mean-start-latency axis; pure bookkeeping, no RNG
+        self.spawn_log: List[Tuple[float, bool]] = []
 
     # -- spawning -----------------------------------------------------------
 
@@ -101,21 +117,81 @@ class LambdaPool:
         return (c.cold_base_s + c.cold_per_request_s * queue_pos
                 + abs(self.rng.normal(0.0, c.cold_jitter_s)))
 
+    def _release_env(self, w: SimWorker, at: float):
+        """Hand a finished worker's sandbox back to the keep-alive pool."""
+        if self.provider is not None and w.env_cid >= 0:
+            self.provider.release(cid=w.env_cid,
+                                  created_at=w.env_created_at,
+                                  uses=w.env_uses, speed=w.speed, at=at)
+
     def spawn_bulk(self, wids: List[int], at: float) -> List[SimWorker]:
         """Spawn workers for the given slots; POST requests queue in one
-        background thread (the paper's CURL multi interface)."""
+        background thread (the paper's CURL multi interface).
+
+        With the provider enabled, sandboxes of slots being replaced go
+        back to the keep-alive pool first, then each launch either hits a
+        warm sandbox (sticky speed, sub-second start, skips the CURL
+        provisioning queue) or cold-misses into the Fig 8 model — where
+        the queue position counts COLD provisions only, and the account
+        burst limit can add a throttle wait."""
+        prov = self.provider
+        if prov is not None:
+            for wid in wids:
+                if wid in self.workers:
+                    self._release_env(self.workers[wid], at)
         out = []
-        for i, wid in enumerate(wids):
-            cold = self._cold_start(i)
+        cold_pos = 0
+        for wid in wids:
+            warm = prov.acquire(at) if prov is not None else None
+            if warm is not None:
+                start = prov.warm_start_s()
+                speed = warm.speed
+                cid, env_at, uses = warm.cid, warm.created_at, warm.uses
+            else:
+                start = self._cold_start(cold_pos)
+                cold_pos += 1
+                speed = self._speed()
+                if prov is not None:
+                    start += prov.throttle_wait(at)
+                    cid, env_at, uses = prov.new_cid(), at, 1
+                else:
+                    cid, env_at, uses = -1, at, 1
             gen = (self.workers[wid].generation + 1
                    if wid in self.workers else 0)
-            w = SimWorker(wid=wid, ready_at=at + cold, speed=self._speed(),
-                          deadline=at + cold + self.cfg.lifetime_s,
-                          spawned_at=at, generation=gen, cold_start_s=cold)
+            w = SimWorker(wid=wid, ready_at=at + start, speed=speed,
+                          deadline=at + start + self.cfg.lifetime_s,
+                          spawned_at=at, generation=gen, cold_start_s=start,
+                          warm_start=warm is not None, env_cid=cid,
+                          env_created_at=env_at, env_uses=uses)
             self.workers[wid] = w
             self.total_spawns += 1
+            self.spawn_log.append((start, warm is not None))
             out.append(w)
         return out
+
+    def retire(self, wids: List[int], at: float):
+        """Remove worker slots for good (elastic shrink): their sandboxes
+        go back to the provider's keep-alive pool."""
+        for wid in wids:
+            w = self.workers.pop(wid, None)
+            if w is not None:
+                self._release_env(w, at)
+
+    def crash(self, wid: int):
+        """Mark a worker's sandbox as destroyed (failure injection): the
+        provider tears down crashed environments, so the next spawn for
+        this slot cannot land warm on it."""
+        w = self.workers.get(wid)
+        if w is not None:
+            w.env_cid = -1
+
+    def mean_start_latency(self) -> float:
+        return (float(np.mean([s for s, _ in self.spawn_log]))
+                if self.spawn_log else 0.0)
+
+    def warm_frac(self) -> float:
+        return (float(np.mean([w for _, w in self.spawn_log]))
+                if self.spawn_log else 0.0)
 
     # -- per-round timing ---------------------------------------------------
 

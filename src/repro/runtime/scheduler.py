@@ -30,11 +30,17 @@ master averages the lossy decoded ω, so the convergence impact is
 measured, not assumed.
 
 Elasticity: workers hitting their Lambda lifetime (or killed by failure
-injection) are respawned with a cold start; the replacement regenerates its
-shard deterministically (data is a pure function of (seed, shard)); the
-algorithm state a replacement needs — (z, rho, k) and its OWN (x, u) — is
-exactly what ``repro.checkpoint`` persists, so mid-run worker replacement
-and full restarts share one mechanism.
+injection) are respawned — cold, or WARM when the pool's provider model
+is enabled (``PoolConfig(provider=...)``: the dead invocation's sandbox
+sits in a keep-alive pool); the replacement regenerates its shard
+deterministically (data is a pure function of (seed, shard)); the
+algorithm state a replacement needs — (z, rho, k) and its OWN (x, u) —
+is exactly what ``repro.checkpoint`` persists, so mid-run worker
+replacement and full restarts share one mechanism.  A billing meter
+(``runtime.billing``) prices every spawn/round/byte, and
+``SchedulerConfig(autoscale=...)`` lets a closed-loop controller
+(``runtime.autoscale``) call ``rescale()`` mid-run — elastic resizes in
+both directions, with retired sandboxes feeding the warm pool.
 """
 from __future__ import annotations
 
@@ -51,6 +57,8 @@ from repro.core import admm
 from repro.core.admm import AdmmOptions, WorkerState
 from repro.core.fista import FistaOptions
 from repro.optim.compression import OmegaCodec, message_bytes
+from repro.runtime.autoscale import AutoscaleConfig, Autoscaler
+from repro.runtime.billing import BillingConfig, BillingMeter
 from repro.runtime.pool import LambdaPool, PoolConfig
 from repro.runtime.reduce import TreeConfig, fanin_drain
 
@@ -104,6 +112,13 @@ class SchedulerConfig:
     iter_smoothing: bool = False
     checkpoint_every: int = 0     # rounds; 0 = off
     checkpoint_dir: Optional[str] = None
+    # dollar meter (runtime.billing): every run yields a cost next to its
+    # sim time; constants are the AWS-style defaults in BillingConfig
+    billing: BillingConfig = BillingConfig()
+    # closed-loop elasticity (runtime.autoscale): when the policy is not
+    # "off", solve() lets the controller call rescale() mid-run.  Applies
+    # to the synchronous-family modes (async_ paces itself per-arrival)
+    autoscale: AutoscaleConfig = AutoscaleConfig()
 
 
 class RoundMetrics(NamedTuple):
@@ -118,6 +133,11 @@ class RoundMetrics(NamedTuple):
     inner_iters: np.ndarray      # (W,)
     n_respawns: int
     slowest10: np.ndarray        # (W,) bool — in the slowest 10% this round
+    # provider-era fields (defaulted so older call sites keep working)
+    round_wall_s: float = 0.0    # this round's wall time (rescale-safe)
+    t_fanin_wait: float = 0.0    # master drain past the last omega arrival
+    cost_usd: float = 0.0        # cumulative run cost (runtime.billing)
+    n_workers: int = 0           # fleet size this round (autoscale varies it)
 
 
 class Scheduler:
@@ -160,10 +180,30 @@ class Scheduler:
         self.msg_bytes = message_bytes(cfg.compress, self.wire_d,
                                        topk_frac=cfg.topk_frac,
                                        qsgd_bits=cfg.qsgd_bits)
+        self.meter = BillingMeter(cfg.billing)
+        self._billed_spawns = 0
+        self.autoscaler: Optional[Autoscaler] = None
         self.pool.spawn_bulk(list(range(W)), at=0.0)
         self.sim_time = max(w.ready_at for w in self.pool.workers.values())
         self.cold_starts = {w.wid: w.cold_start_s
                             for w in self.pool.workers.values()}
+        self._bill_spawns()
+        # the early workers idle (billed) until the whole fleet is up,
+        # and the coordinator runs from t=0
+        for w in self.pool.workers.values():
+            self.meter.record_duration(self.sim_time - w.ready_at)
+        self.meter.record_master(self.sim_time)
+
+    # -- billing --------------------------------------------------------
+    def _bill_spawns(self):
+        """Meter invocation starts (and, optionally, their init time)."""
+        log = self.pool.spawn_log
+        new = log[self._billed_spawns:]
+        if new:
+            self.meter.record_requests(len(new))
+            if self.cfg.billing.bill_cold_init:
+                self.meter.record_duration(sum(s for s, _ in new))
+            self._billed_spawns = len(log)
 
     def _logical(self, wid: int) -> int:
         return wid // self.repl
@@ -172,11 +212,17 @@ class Scheduler:
     def _maybe_respawn(self, wid: int) -> float:
         """Returns extra delay if slot wid had to be respawned this round."""
         w = self.pool.workers[wid]
-        dead = (self.sim_time > w.deadline
-                - self.cfg.respawn_before_deadline_s
-                or self.pool.roll_failure())
-        if not dead:
+        lifetime_hit = (self.sim_time > w.deadline
+                        - self.cfg.respawn_before_deadline_s)
+        # short-circuit preserved: the failure roll is only drawn when the
+        # lifetime check passes (seed-equivalence anchor)
+        failed = not lifetime_hit and self.pool.roll_failure()
+        if not (lifetime_hit or failed):
             return 0.0
+        if failed:
+            # a CRASHED invocation's sandbox is torn down by the provider,
+            # not kept warm — only clean lifetime exits reach the pool
+            self.pool.crash(wid)
         self.pool.spawn_bulk([wid], at=self.sim_time)
         self.n_respawns += 1
         # the replacement regenerates its shard and reloads (z, rho, x, u):
@@ -212,7 +258,7 @@ class Scheduler:
         self.u = self.u.at[lw].set(u_new)
 
     def _master_z_update(self, omega_bar: jnp.ndarray, q_sum: float,
-                         n_eff: int):
+                         n_eff: int, adapt_rho: bool = True):
         z_new = self.problem.prox_h(omega_bar, 1.0 / (n_eff * self.rho))
         r_norm = float(np.sqrt(q_sum))
         # dual residual: Boyd's consensus form s = rho*sqrt(W)*||dz|| (the
@@ -224,8 +270,9 @@ class Scheduler:
                        * np.sqrt(n_eff))
         self.z_prev, self.z = self.z, z_new
         rho_old = self.rho
-        self.rho = float(admm.new_penalty(
-            jnp.float32(self.rho), r_norm, s_norm, self.cfg.admm))
+        if adapt_rho:
+            self.rho = float(admm.new_penalty(
+                jnp.float32(self.rho), r_norm, s_norm, self.cfg.admm))
         if self.rho != rho_old:
             # broadcast of the new penalty: workers rescale their scaled
             # duals u = y/rho (Boyd §3.4.1; see core.admm.new_penalty)
@@ -311,15 +358,32 @@ class Scheduler:
 
         bcast = self.pool.comm_time(4 * self.wire_d)
         self.sim_time = master_done + bcast
-        t_idle = (self.sim_time - round_start) - t_comp
+        round_wall = self.sim_time - round_start
+        t_idle = round_wall - t_comp
         self.k += 1
+
+        # the bill: every worker holds its memory for the whole round
+        # (idle time at the barrier is billed time — the serverless cost
+        # story), every omega uplink + z downlink crosses the boundary,
+        # and the coordinator runs throughout.  Mid-round respawn init
+        # spans (extras) are carved out of the respawned workers' billed
+        # time — init billing is _bill_spawns' job, gated on
+        # bill_cold_init — while the OTHER workers' barrier wait on those
+        # respawns stays billed.
+        self._bill_spawns()
+        self.meter.record_duration(round_wall * W - float(extras.sum()))
+        self.meter.record_master(round_wall)
+        self.meter.record_bytes(W * (self.msg_bytes + 4 * self.wire_d))
 
         thresh = np.quantile([t for t, _ in arrivals], 0.9)
         m = RoundMetrics(
             k=self.k, sim_time=self.sim_time, r_norm=r_norm, s_norm=s_norm,
             rho=self.rho, t_comp=t_comp, t_comm=t_comm, t_idle=t_idle,
             inner_iters=inner, n_respawns=self.n_respawns,
-            slowest10=np.array([t >= thresh for t, _ in arrivals]))
+            slowest10=np.array([t >= thresh for t, _ in arrivals]),
+            round_wall_s=round_wall,
+            t_fanin_wait=master_done - max(t for t, _ in waited),
+            cost_usd=self.meter.total_usd(), n_workers=W)
         self.history.append(m)
         return m
 
@@ -349,11 +413,17 @@ class Scheduler:
             self._async_omega[wid] = omega
             self._async_tcomp[wid] = tc
             self._async_iters[wid] = it
+            # one invocation: billed for its active span + its wire
+            # bytes; a respawn's init (extra) is carved out — init
+            # billing is _bill_spawns' job, gated on bill_cold_init
+            self.meter.record_duration(arrive - at - extra)
+            self.meter.record_bytes(self.msg_bytes + 4 * self.wire_d)
 
         self._async_omega: Dict[int, jnp.ndarray] = {}
         self._async_tcomp: Dict[int, float] = {}
         self._async_iters: Dict[int, int] = {}
         blocked: List[int] = []
+        master_billed_to = self.sim_time
 
         for wid in range(W):
             launch(wid, self.pool.workers[wid].ready_at)
@@ -370,11 +440,22 @@ class Scheduler:
             if since_update >= cfg.async_batch:
                 since_update = 0
                 omega_bar = jnp.mean(self.omega_table, axis=0)
+                # FIXED penalty in async mode: the bounded-staleness
+                # analyses this path follows (Zhang & Kwok '14, Chang et
+                # al. '16) assume a constant rho, and residual balancing
+                # here would act on a STALE r (the q-cache lags z) against
+                # a per-micro-update s — spurious rho changes then rescale
+                # u under in-flight omegas computed with the old rho, which
+                # destabilizes the run precisely near convergence.
                 r_norm, s_norm = self._master_z_update(
-                    omega_bar, float(self.q_table.sum()), W)
+                    omega_bar, float(self.q_table.sum()), W,
+                    adapt_rho=False)
                 z_version += 1
                 updates += 1
                 self.k += 1
+                self._bill_spawns()
+                self.meter.record_master(self.sim_time - master_billed_to)
+                master_billed_to = self.sim_time
                 t_comp = np.array([self._async_tcomp.get(i, 0.0)
                                    for i in range(W)])
                 m = RoundMetrics(
@@ -384,14 +465,18 @@ class Scheduler:
                     inner_iters=np.array([self._async_iters.get(i, 0)
                                           for i in range(W)]),
                     n_respawns=self.n_respawns,
-                    slowest10=np.zeros(W, bool))
+                    slowest10=np.zeros(W, bool),
+                    cost_usd=self.meter.total_usd(), n_workers=W)
                 self.history.append(m)
-                # unblock stale workers
-                for bw in list(blocked):
-                    if z_version - worker_version[bw] <= cfg.staleness_bound:
-                        blocked.remove(bw)
-                        worker_version[bw] = z_version
-                        launch(bw, self.sim_time)
+                # unblock stale workers: the z-update IS the rebroadcast —
+                # every blocked worker receives the fresh z and relaunches
+                # at the current version.  (The bound is re-checked at each
+                # relaunch; a worker can never run ahead of the rebroadcast
+                # by more than one in-flight solve.)
+                for bw in blocked:
+                    worker_version[bw] = z_version
+                    launch(bw, self.sim_time)
+                blocked.clear()
 
             # relaunch this worker against the current z
             if z_version - worker_version[wid] > cfg.staleness_bound:
@@ -409,6 +494,8 @@ class Scheduler:
         if cfg.mode == "async_":
             self.run_async(K)
             return self.z
+        if cfg.autoscale.policy != "off" and self.autoscaler is None:
+            self.autoscaler = Autoscaler(cfg.autoscale, quantum=self.repl)
         for _ in range(K):
             m = self.run_round()
             if on_round:
@@ -416,6 +503,14 @@ class Scheduler:
             if (m.r_norm <= cfg.admm.eps_primal
                     and m.s_norm <= cfg.admm.eps_dual):
                 break
+            if self.autoscaler is not None:
+                self.autoscaler.observe(
+                    round_wall_s=m.round_wall_s,
+                    t_comp_mean=float(m.t_comp.mean()),
+                    t_fanin_wait=m.t_fanin_wait)
+                new_w = self.autoscaler.decide(self.cfg.n_workers)
+                if new_w is not None:
+                    self.rescale(new_w)
         return self.z
 
     # -- elastic rescale ----------------------------------------------------
@@ -428,6 +523,7 @@ class Scheduler:
         d = self.problem.n_features
         if new_w % self.repl:
             raise ValueError("new worker count must keep r | W")
+        old_w = self.cfg.n_workers
         self.cfg = dataclasses.replace(self.cfg, n_workers=new_w)
         self.n_logical = new_w // self.repl
         WL = self.n_logical
@@ -437,8 +533,19 @@ class Scheduler:
         self.omega_table = jnp.broadcast_to(self.z, (WL, d)).astype(dt).copy()
         self.q_table = np.zeros((WL,), np.float64)
         self.codec.reset()
+        # shrink: retired slots hand their sandboxes to the provider's
+        # keep-alive pool (free respawn capacity for the survivors)
+        if new_w < old_w:
+            self.pool.retire(list(range(new_w, old_w)), at=self.sim_time)
+        t0 = self.sim_time
         self.pool.spawn_bulk(list(range(new_w)), at=self.sim_time)
         self.sim_time = max(w.ready_at for w in self.pool.workers.values())
+        self._bill_spawns()
+        # the respawn-wave stall is billed like the __init__ ramp: ready
+        # workers idle until the slowest spawn, the coordinator runs on
+        for w in self.pool.workers.values():
+            self.meter.record_duration(self.sim_time - w.ready_at)
+        self.meter.record_master(self.sim_time - t0)
 
 
 # ---------------------------------------------------------------------------

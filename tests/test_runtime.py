@@ -85,6 +85,43 @@ def test_elastic_rescale_continues_converging(problem):
     assert sched.history[-1].r_norm < sched.history[4].r_norm
 
 
+def test_elastic_shrink_rescale(problem):
+    """The shrink direction (W=8 -> 4): shard remap, retired slots gone,
+    respawn accounting, and continued convergence."""
+    sched = Scheduler(problem, SchedulerConfig(
+        n_workers=8, admm=ADMM, pool=PoolConfig(seed=7)))
+    for _ in range(5):
+        sched.run_round()
+    spawns_before = sched.pool.total_spawns
+    r_before = sched.history[-1].r_norm
+    sched.rescale(4)
+    # state remapped to the 4 surviving shards
+    assert sched.x.shape[0] == 4
+    assert sched.u.shape[0] == 4
+    assert sched.omega_table.shape[0] == 4
+    assert sched.n_logical == 4
+    # retired slots are really gone; survivors were respawned once each
+    assert set(sched.pool.workers) == set(range(4))
+    assert sched.pool.total_spawns == spawns_before + 4
+    m = sched.run_round()
+    assert m.t_comp.shape == (4,)
+    assert m.n_workers == 4
+    sched.solve(max_rounds=30)
+    assert sched.history[-1].r_norm < r_before
+
+
+def test_shrink_rescale_respects_replication_quantum(problem):
+    sched = Scheduler(problem, SchedulerConfig(
+        n_workers=8, mode="replicated", replication=2, admm=ADMM,
+        pool=PoolConfig(seed=8)))
+    sched.run_round()
+    with pytest.raises(ValueError, match="r | W"):
+        sched.rescale(5)
+    sched.rescale(4)
+    assert sched.n_logical == 2
+    assert set(sched.pool.workers) == set(range(4))
+
+
 def test_cold_start_bulk_queue_grows():
     """Fig 8: the slowest cold start grows with bulk size; the fastest
     stays flat."""
