@@ -16,12 +16,11 @@ import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.fig4_speedup import PAPER_D
-from repro.configs.logreg_paper import scaled
+from repro import problems
+from repro.api import ExperimentSpec, run
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
 from repro.optim import compression as C
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig, TreeConfig
-from repro.runtime.scheduler import LogRegProblem
+from repro.runtime import PoolConfig, SchedulerConfig, TreeConfig
 
 
 def wire_model():
@@ -49,20 +48,23 @@ def convergence_check():
     """Dense vs compressed consensus through the REAL scheduler path: the
     ω the master averages is the codec's lossy view (delta-EF sync), so
     the objective gap is a measurement, not a bound."""
-    cfg = scaled(8_000, 512, density=0.02)
+    pkw = dict(n_samples=8_000, n_features=512, density=0.02, lam1=1.0,
+               fista=dict(min_iters=1))
     W, rounds = 8, 40
-    prob = LogRegProblem(cfg, fista=FistaOptions(min_iters=1))
+    prob = problems.make("logreg", **pkw)
 
     out = {}
     for method in ("none", "topk", "qsgd"):
-        sched = Scheduler(prob, SchedulerConfig(
-            n_workers=W, admm=AdmmOptions(max_iters=rounds),
-            compress=method, topk_frac=0.05, qsgd_bits=4,
-            pool=PoolConfig(seed=0)))
-        z = sched.solve(max_rounds=rounds)
-        out[method] = {"obj": prob.objective(z, W),
-                       "r_norm": sched.history[-1].r_norm,
-                       "msg_bytes": sched.msg_bytes}
+        res = run(ExperimentSpec(
+            problem="logreg", problem_kwargs=pkw,
+            scheduler=SchedulerConfig(
+                n_workers=W, admm=AdmmOptions(max_iters=rounds),
+                compress=method, topk_frac=0.05, qsgd_bits=4,
+                pool=PoolConfig(seed=0)),
+            max_rounds=rounds, label=f"compress/{method}"), problem=prob)
+        out[method] = {"obj": prob.objective(res.z, W),
+                       "r_norm": res.trace[-1]["r_norm"],
+                       "msg_bytes": res.scheduler.msg_bytes}
         ratio = out["none"]["msg_bytes"] / out[method]["msg_bytes"]
         print(f"  {method:5s}: obj={out[method]['obj']:10.3f} "
               f"r={out[method]['r_norm']:.4f} "

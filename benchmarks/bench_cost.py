@@ -20,17 +20,15 @@ Emits experiments/bench_cost_pareto.json with per-point metrics, the
 Pareto front, and the acceptance checks (warm beats cold on mean start
 latency; the autoscale points are not dominated).
 """
-import time
-
 import numpy as np
 
 from benchmarks.common import emit
-from benchmarks.fig4_speedup import PAPER_D, PaperScaleTiming
-from repro.configs.logreg_paper import scaled
+from benchmarks.fig4_speedup import PAPER_D
+from repro import problems
+from repro.api import ExperimentSpec, run
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
 from repro.runtime import (AutoscaleConfig, PoolConfig, ProviderConfig,
-                           Scheduler, SchedulerConfig)
+                           SchedulerConfig)
 
 TARGET_R = 0.35          # residual target every run solves to
 MAX_ROUNDS = 36
@@ -40,47 +38,49 @@ MAX_ROUNDS = 36
 # against ~hour-long full-scale runs)
 LIFETIME_S = 240.0
 
+PROBLEM_KW = dict(n_samples=4096, n_features=192, density=0.05, lam1=0.3,
+                  fista=dict(min_iters=1, eps_grad=1e-3))
+
 
 def make_problem():
-    cfg = scaled(4096, 192, density=0.05, lam1=0.3)
-    return PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1,
-                                                    eps_grad=1e-3))
+    return problems.make("logreg_paper_timing", **PROBLEM_KW)
 
 
 def run_point(problem, label, W, *, provider=None, autoscale=None, seed=0):
-    scfg = SchedulerConfig(
-        n_workers=W,
-        admm=AdmmOptions(max_iters=MAX_ROUNDS, eps_primal=TARGET_R,
-                         eps_dual=TARGET_R),
-        iter_smoothing=True,
-        wire_d=PAPER_D,
-        autoscale=autoscale or AutoscaleConfig(),
-        pool=PoolConfig(seed=seed, lifetime_s=LIFETIME_S,
-                        provider=provider or ProviderConfig()))
-    t0 = time.time()
-    sched = Scheduler(problem, scfg)
-    sched.solve(max_rounds=MAX_ROUNDS)
-    m = sched.history[-1]
+    spec = ExperimentSpec(
+        problem="logreg_paper_timing", problem_kwargs=PROBLEM_KW,
+        scheduler=SchedulerConfig(
+            n_workers=W,
+            admm=AdmmOptions(max_iters=MAX_ROUNDS, eps_primal=TARGET_R,
+                             eps_dual=TARGET_R),
+            iter_smoothing=True,
+            wire_d=PAPER_D,
+            autoscale=autoscale or AutoscaleConfig(),
+            pool=PoolConfig(seed=seed, lifetime_s=LIFETIME_S,
+                            provider=provider or ProviderConfig())),
+        max_rounds=MAX_ROUNDS, label=label)
+    res = run(spec, problem=problem)
+    sched = res.scheduler
     stats = sched.pool.provider.stats if sched.pool.provider else None
     point = {
         "label": label,
-        "w_start": W,
-        "w_final": sched.cfg.n_workers,
+        "w_start": res.w_start,
+        "w_final": res.w_final,
         "policy": (provider.policy if provider and provider.enabled
                    else "cold"),
         "autoscale": (autoscale.policy if autoscale else "off"),
-        "rounds": len(sched.history),
-        "r_norm": float(m.r_norm),
-        "sim_time_s": float(m.sim_time),
-        "cost_usd": float(sched.meter.total_usd()),
-        "cost_breakdown": sched.meter.summary(),
+        "rounds": res.rounds,
+        "r_norm": float(res.trace[-1]["r_norm"]),
+        "sim_time_s": res.sim_time_s,
+        "cost_usd": res.cost_usd,
+        "cost_breakdown": res.cost_breakdown,
         "mean_start_latency_s": sched.pool.mean_start_latency(),
         "warm_frac": sched.pool.warm_frac(),
         "evictions": stats.evictions if stats else 0,
-        "n_respawns": sched.n_respawns,
+        "n_respawns": res.n_respawns,
         "rescales": (list(sched.autoscaler.decisions)
                      if sched.autoscaler else []),
-        "wall_s": time.time() - t0,
+        "wall_s": res.wall_s,
     }
     print(f"  {label:28s} W={W:3d}->{point['w_final']:3d} "
           f"rounds={point['rounds']:2d} sim={point['sim_time_s']:8.1f}s "

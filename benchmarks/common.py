@@ -14,6 +14,14 @@ def emit(name: str, payload: dict):
     print(f"[bench] wrote {path}")
 
 
+def emit_results(name: str, results, extra: dict = None):
+    """Emit a list of ``repro.api.RunResult`` as one artifact: each run's
+    spec rides along, so the artifact is self-reproducing."""
+    payload = {"runs": [r.to_dict() for r in results]}
+    payload.update(extra or {})
+    emit(name, payload)
+
+
 def timed(fn, *args, repeat=3, **kw):
     fn(*args, **kw)  # warmup/compile
     t0 = time.time()

@@ -6,7 +6,6 @@ k=36 vs the paper's <=23 (same geometric decay; constants depend on the
 rho trajectory and data realization; EXPERIMENTS.md §Paper).
 """
 import argparse
-import time
 
 
 def main(full: bool = False):
@@ -18,42 +17,45 @@ def main(full: bool = False):
                           str(__import__("pathlib").Path(__file__)
                               .resolve().parents[1] / "experiments"
                               / "data_cache"))
-    import jax.numpy as jnp
     from benchmarks.common import emit
-    from repro.configs.logreg_paper import CONFIG, scaled
+    from repro.api import ExperimentSpec, run
+    from repro.configs.logreg_paper import CONFIG
     from repro.core.admm import AdmmOptions
-    from repro.core.fista import FistaOptions
-    from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
-    from repro.runtime.scheduler import LogRegProblem
+    from repro.runtime import PoolConfig, SchedulerConfig
 
+    W = 64
     if full:
-        cfg, W, dtype = CONFIG, 64, jnp.float64
+        pkw = dict(n_samples=CONFIG.n_samples, n_features=CONFIG.n_features,
+                   density=CONFIG.density, lam1=CONFIG.lam1,
+                   fista=dict(min_iters=1), dtype="float64")
+        cfg = CONFIG
     else:
-        cfg, W, dtype = scaled(60_000, 1_000, density=0.01), 64, jnp.float32
+        pkw = dict(n_samples=60_000, n_features=1_000, density=0.01,
+                   lam1=CONFIG.lam1, fista=dict(min_iters=1),
+                   dtype="float32")
+        cfg = CONFIG
 
-    prob = LogRegProblem(cfg, fista=FistaOptions(min_iters=1), dtype=dtype)
-    sched = Scheduler(prob, SchedulerConfig(
-        n_workers=W,
-        admm=AdmmOptions(rho0=cfg.rho0, max_iters=cfg.max_admm_iters,
-                         eps_primal=cfg.eps_primal, eps_dual=cfg.eps_dual),
-        pool=PoolConfig(seed=0)))
+    res = run(ExperimentSpec(
+        problem="logreg", problem_kwargs=pkw,
+        scheduler=SchedulerConfig(
+            n_workers=W,
+            admm=AdmmOptions(rho0=cfg.rho0, max_iters=cfg.max_admm_iters,
+                             eps_primal=cfg.eps_primal,
+                             eps_dual=cfg.eps_dual),
+            pool=PoolConfig(seed=0))))
+    k = res.scheduler.k
+    trace = [{"k": t["k"], "r": t["r_norm"], "s": t["s_norm"],
+              "rho": t["rho"], "inner_mean": t["inner_mean"]}
+             for t in res.trace]
 
-    t0 = time.time()
-    trace = []
-    def rec(m):
-        trace.append({"k": m.k, "r": m.r_norm, "s": m.s_norm, "rho": m.rho,
-                      "inner_mean": float(m.inner_iters.mean())})
-    sched.solve(on_round=rec)
-    wall = time.time() - t0
-
-    print(f"fig3: W={W} converged k={sched.k} "
-          f"(paper: <=23 at full scale), wall={wall:.0f}s")
+    print(f"fig3: W={W} converged k={k} "
+          f"(paper: <=23 at full scale), wall={res.wall_s:.0f}s")
     for row in trace[:: max(len(trace) // 12, 1)]:
         print("  k=%(k)3d r=%(r)10.4f s=%(s)9.4f rho=%(rho)5.2f" % row)
     emit("fig3_convergence" + ("_full" if full else ""), {
         "scale": "paper-full" if full else "1/10",
-        "W": W, "k_converged": sched.k, "wall_s": wall, "trace": trace})
-    return sched.k
+        "W": W, "k_converged": k, "wall_s": res.wall_s, "trace": trace})
+    return k
 
 
 if __name__ == "__main__":

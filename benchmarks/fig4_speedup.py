@@ -24,16 +24,15 @@ flat baseline collapses to ~26%.  ``--paper-scale`` extends sweeps to
 W=1024 (several CPU-minutes).
 """
 import argparse
-import time
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs.logreg_paper import scaled
+from repro import problems
+from repro.api import ExperimentSpec, run
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig, TreeConfig
-from repro.runtime.scheduler import LogRegProblem
+from repro.problems import LogRegProblem
+from repro.runtime import PoolConfig, SchedulerConfig, TreeConfig
 
 PAPER_N = 600_000
 PAPER_D = 10_000
@@ -48,22 +47,38 @@ class PaperScaleTiming(LogRegProblem):
         return hi - lo
 
 
+@problems.register("logreg_paper_timing")
+def make_paper_timing(n_samples: int = 24_000, n_features: int = 500,
+                      density: float = 0.02, lam1: float = 1.0,
+                      seed: int = 0, fista=None, fixed_inner=None
+                      ) -> PaperScaleTiming:
+    """Benchmark-local registry plugin: the reduced-instance /
+    paper-scale-timing hybrid behind figs 4/5/9 and bench_cost."""
+    from repro.configs.logreg_paper import scaled
+    return PaperScaleTiming(
+        scaled(n_samples, n_features, density=density, lam1=lam1,
+               seed=seed),
+        fista=problems.as_fista_options(fista), fixed_inner=fixed_inner)
+
+
 def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0,
               fanin: str = "flat", compress: str = "none"):
-    cfg = scaled(24_000, 500, density=0.02)
-    fi = dict(fixed_inner=50) if uniform else {}
-    prob = PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1), **fi)
+    pkw = dict(fista=dict(min_iters=1),
+               fixed_inner=50 if uniform else None)
+    prob = problems.make("logreg_paper_timing", **pkw)
     out = {}
     for W in ws:
-        sched = Scheduler(prob, SchedulerConfig(
-            n_workers=W, admm=AdmmOptions(max_iters=rounds),
-            iter_smoothing=True,
-            fanin=fanin, tree=TreeConfig(), compress=compress,
-            wire_d=PAPER_D,        # messages at the paper's d, like N_w
-            pool=PoolConfig(seed=seed)))
-        t0 = time.time()
-        sched.solve(max_rounds=rounds)
-        hist = sched.history
+        res = run(ExperimentSpec(
+            problem="logreg_paper_timing", problem_kwargs=pkw,
+            scheduler=SchedulerConfig(
+                n_workers=W, admm=AdmmOptions(max_iters=rounds),
+                iter_smoothing=True,
+                fanin=fanin, tree=TreeConfig(), compress=compress,
+                wire_d=PAPER_D,    # messages at the paper's d, like N_w
+                pool=PoolConfig(seed=seed)),
+            max_rounds=rounds,
+            label=f"{fanin}/{compress}/W={W}"), problem=prob)
+        hist = res.history
         t_round = np.mean([
             hist[i].sim_time - hist[i - 1].sim_time
             for i in range(1, len(hist))])
@@ -75,9 +90,9 @@ def run_sweep(ws, *, uniform: bool, rounds: int = 24, seed: int = 0,
             "idle_std": float(np.mean([m.t_idle.std() for m in hist])),
             "slowest10_frac": np.stack(
                 [m.slowest10 for m in hist]).mean(0).tolist(),
-            "r_norm": float(hist[-1].r_norm),
-            "msg_bytes": sched.msg_bytes,
-            "wall_s": time.time() - t0,
+            "r_norm": float(res.trace[-1]["r_norm"]),
+            "msg_bytes": res.scheduler.msg_bytes,
+            "wall_s": res.wall_s,
         }
         print(f"  W={W:4d} round={t_round:7.3f}s comp={out[W]['comp_mean']:6.3f}s "
               f"idle={out[W]['idle_mean']:6.3f}s [{out[W]['wall_s']:.0f}s wall]")
@@ -127,7 +142,10 @@ def fanin_sweep(args):
     return results
 
 
-def main(args):
+def main(args=None, paper_scale: bool = False):
+    if args is None:   # called from benchmarks.run rather than the CLI
+        args = argparse.Namespace(paper_scale=paper_scale, fanin=None,
+                                  compress=None, sweep=False, rounds=16)
     if args.fanin or args.compress or args.sweep:
         return fanin_sweep(args)
     ws = [4, 8, 16, 32, 64, 128, 256] if args.paper_scale else [4, 8, 16, 32, 64]

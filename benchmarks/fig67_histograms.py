@@ -10,25 +10,25 @@ import argparse
 import numpy as np
 
 from benchmarks.common import emit
-from benchmarks.fig4_speedup import PAPER_D, PaperScaleTiming
-from repro.configs.logreg_paper import scaled
+from benchmarks.fig4_speedup import PAPER_D  # import registers the plugin
+from repro import api
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
+from repro.runtime import PoolConfig, SchedulerConfig
 
 
 def run(W: int, uniform: bool, rounds: int = 12):
-    cfg = scaled(24_000, 500, density=0.02)
-    fi = dict(fixed_inner=50) if uniform else {}
-    prob = PaperScaleTiming(cfg, fista=FistaOptions(min_iters=1), **fi)
-    sched = Scheduler(prob, SchedulerConfig(
-        n_workers=W, admm=AdmmOptions(max_iters=rounds),
-        iter_smoothing=True, wire_d=PAPER_D,   # messages at the paper's d
-        pool=PoolConfig(seed=0)))
-    sched.solve(max_rounds=rounds)
-    comp = np.concatenate([m.t_comp for m in sched.history])
-    idle = np.concatenate([m.t_idle for m in sched.history])
-    comm = np.concatenate([m.t_comm for m in sched.history])
+    res = api.run(api.ExperimentSpec(
+        problem="logreg_paper_timing",
+        problem_kwargs=dict(fista=dict(min_iters=1),
+                            fixed_inner=50 if uniform else None),
+        scheduler=SchedulerConfig(
+            n_workers=W, admm=AdmmOptions(max_iters=rounds),
+            iter_smoothing=True, wire_d=PAPER_D,  # paper-d messages
+            pool=PoolConfig(seed=0)),
+        max_rounds=rounds))
+    comp = np.concatenate([m.t_comp for m in res.history])
+    idle = np.concatenate([m.t_idle for m in res.history])
+    comm = np.concatenate([m.t_comm for m in res.history])
     return {
         "comp_hist": np.histogram(comp, bins=20)[0].tolist(),
         "comp_mean": float(comp.mean()), "comp_std": float(comp.std()),

@@ -1,7 +1,9 @@
 """Benchmark harness — one entry per paper table/figure.
 
-  python -m benchmarks.run              # default (CPU-minutes) pass
-  python -m benchmarks.run --paper      # full-scale variants (slower)
+  python -m benchmarks.run                    # default (CPU-minutes) pass
+  python -m benchmarks.run --paper            # full-scale variants (slower)
+  python -m benchmarks.run --list             # print benchmark names
+  python -m benchmarks.run --only a,b,c       # run a comma-separated subset
 
 Emits CSV to stdout (name,seconds,key=value ...) and JSON artifacts under
 experiments/.
@@ -16,12 +18,15 @@ def main(argv=None) -> None:
     ap.add_argument("--paper", action="store_true",
                     help="full-scale variants (W=256 sweeps, full fig3)")
     ap.add_argument("--only", default=None,
-                    help="run a single benchmark by name")
+                    help="comma-separated subset of benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="print the benchmark names and exit")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_admm_vs_sgd, bench_compression, bench_cost,
-                            bench_kernels, fig3_convergence, fig4_speedup,
-                            fig67_histograms, fig8_coldstart, roofline)
+                            bench_kernels, bench_workloads, fig3_convergence,
+                            fig4_speedup, fig67_histograms, fig8_coldstart,
+                            roofline)
 
     jobs = [
         ("kernels", lambda: bench_kernels.main()),
@@ -31,16 +36,24 @@ def main(argv=None) -> None:
         ("fig67_histograms", lambda: fig67_histograms.main(big=args.paper)),
         ("compression", lambda: bench_compression.main()),
         ("bench_cost", lambda: bench_cost.main()),
+        ("bench_workloads", lambda: bench_workloads.main()),
         ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),
         ("roofline", lambda: roofline.main()),
     ]
     names = [name for name, _ in jobs]
-    if args.only and args.only not in names:
-        ap.error(f"unknown benchmark {args.only!r}; choose from {names}")
+    if args.list:
+        print("\n".join(names))
+        return
+    only = None
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(only) - set(names))
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; choose from {names}")
     print("name,seconds,status")
     failures = 0
     for name, fn in jobs:
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         t0 = time.time()
         try:

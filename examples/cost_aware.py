@@ -2,77 +2,85 @@
 
 The paper's pitch is that serverless optimization is CHEAP, but the
 seed simulator priced nothing and every (re)spawn was a cold start.
-This walkthrough runs the same problem four ways and prints the dollar
-cost (runtime.billing) next to the sim time:
+This walkthrough runs the same problem four ways through the declarative
+``repro.api`` and prints the dollar cost (runtime.billing) next to the
+sim time:
 
   1. cold baseline      — the paper's model: every spawn pays Fig 8,
   2. + warm keep-alive  — respawns after the (compressed) lifetime land
                           on the provider's idle-sandbox pool,
   3. + autoscale        — the closed-loop controller resizes the fleet
                           toward its efficiency band mid-run,
-  4. manual vs warm rescale — the elasticity claim, priced.
+  4. manual vs warm rescale — the elasticity claim, priced
+                          (``api.build`` for mid-run control).
 
 Run:  PYTHONPATH=src python examples/cost_aware.py
 """
-from repro.configs.logreg_paper import scaled
+from repro.api import ExperimentSpec, build, run
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
 from repro.runtime import (AutoscaleConfig, PoolConfig, ProviderConfig,
-                           Scheduler, SchedulerConfig)
-from repro.runtime.scheduler import LogRegProblem
+                           SchedulerConfig)
 
 LIFETIME_S = 10.0        # the 15-min limit, compressed to this instance
 RESPAWN_MARGIN_S = 2.0   # respawn_before_deadline, scaled to match
 
+PROBLEM_KW = dict(n_samples=8_192, n_features=512, density=0.02, lam1=0.5,
+                  fista=dict(min_iters=1))
+ADMM = AdmmOptions(max_iters=40)
 
-def run(name, scfg, problem, rounds=30):
-    sched = Scheduler(problem, scfg)
-    sched.solve(max_rounds=rounds)
-    m = sched.history[-1]
-    bill = sched.meter.summary()
-    print(f"{name:26s} W={sched.cfg.n_workers:3d} r={m.r_norm:7.4f} "
-          f"sim={m.sim_time:7.1f}s cost=${bill['total_usd']:.4f} "
+
+def priced(name, scfg, problem, rounds=30):
+    res = run(ExperimentSpec(problem="logreg", problem_kwargs=PROBLEM_KW,
+                             scheduler=scfg, max_rounds=rounds, label=name),
+              problem=problem)
+    bill = res.cost_breakdown
+    sched = res.scheduler
+    print(f"{name:26s} W={sched.cfg.n_workers:3d} "
+          f"r={res.trace[-1]['r_norm']:7.4f} "
+          f"sim={res.sim_time_s:7.1f}s cost=${bill['total_usd']:.4f} "
           f"(compute ${bill['compute_usd']:.4f} / master "
-          f"${bill['master_usd']:.4f}) respawns={sched.n_respawns:3d} "
+          f"${bill['master_usd']:.4f}) respawns={res.n_respawns:3d} "
           f"warm={sched.pool.warm_frac():4.0%} "
           f"mean_start={sched.pool.mean_start_latency():.2f}s")
-    return sched
+    return res
 
 
 def main():
-    cfg = scaled(8_192, 512, density=0.02, lam1=0.5)
-    problem = LogRegProblem(cfg, fista=FistaOptions(min_iters=1))
-    admm = AdmmOptions(max_iters=40)
+    from repro import problems
+    problem = problems.make("logreg", **PROBLEM_KW)
 
     print("== the same problem, priced ==")
-    run("cold baseline", SchedulerConfig(
-        n_workers=8, admm=admm, respawn_before_deadline_s=RESPAWN_MARGIN_S,
+    priced("cold baseline", SchedulerConfig(
+        n_workers=8, admm=ADMM, respawn_before_deadline_s=RESPAWN_MARGIN_S,
         pool=PoolConfig(seed=0, lifetime_s=LIFETIME_S)), problem)
-    warm = run("warm keep-alive", SchedulerConfig(
-        n_workers=8, admm=admm, respawn_before_deadline_s=RESPAWN_MARGIN_S,
+    warm = priced("warm keep-alive", SchedulerConfig(
+        n_workers=8, admm=ADMM, respawn_before_deadline_s=RESPAWN_MARGIN_S,
         pool=PoolConfig(seed=0, lifetime_s=LIFETIME_S,
                         provider=ProviderConfig(enabled=True))), problem)
-    st = warm.pool.provider.stats
+    st = warm.scheduler.pool.provider.stats
     print(f"   provider: {st.warm_hits} warm hits, {st.cold_misses} cold "
           f"misses, {st.evictions} evictions, {st.expirations} TTL reaps")
 
-    auto = run("warm + autoscale(eff)", SchedulerConfig(
-        n_workers=16, admm=admm, respawn_before_deadline_s=RESPAWN_MARGIN_S,
+    auto = priced("warm + autoscale(eff)", SchedulerConfig(
+        n_workers=16, admm=ADMM, respawn_before_deadline_s=RESPAWN_MARGIN_S,
         autoscale=AutoscaleConfig(policy="target_efficiency",
                                   min_workers=4, max_workers=16,
                                   cooldown_rounds=4),
         pool=PoolConfig(seed=0, lifetime_s=LIFETIME_S,
                         provider=ProviderConfig(enabled=True))), problem)
-    if auto.autoscaler and auto.autoscaler.decisions:
-        for k, old, new, why in auto.autoscaler.decisions:
+    scaler = auto.scheduler.autoscaler
+    if scaler and scaler.decisions:
+        for k, old, new, why in scaler.decisions:
             print(f"   autoscaler: round {k}: W {old} -> {new} ({why})")
 
     print("\n== elastic shrink W=8 -> 4, then grow back: cold vs warm ==")
     for name, prov in (("cold spawns", ProviderConfig()),
                        ("warm pool", ProviderConfig(enabled=True))):
-        sched = Scheduler(problem, SchedulerConfig(
-            n_workers=8, admm=admm,
-            pool=PoolConfig(seed=4, provider=prov)))
+        _, sched = build(ExperimentSpec(
+            problem="logreg", problem_kwargs=PROBLEM_KW,
+            scheduler=SchedulerConfig(
+                n_workers=8, admm=ADMM,
+                pool=PoolConfig(seed=4, provider=prov))), problem=problem)
         for _ in range(4):
             sched.run_round()
         sched.rescale(4)            # retirees' sandboxes stay warm

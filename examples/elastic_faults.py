@@ -6,7 +6,8 @@ Runs the same optimization under four regimes and prints a comparison:
      shard regeneration — nothing is lost),
   3. replicated workers (gradient-coding-style exactness under stragglers),
   4. bounded-staleness async ADMM (the paper's proposed improvement),
-plus an elastic rescale (W doubles mid-run) and a checkpoint/restart.
+plus an elastic rescale (W doubles mid-run) and a checkpoint/restart
+(``repro.api.build`` for the mid-run surgery).
 
 Run:  PYTHONPATH=src python examples/elastic_faults.py
 """
@@ -15,47 +16,51 @@ import tempfile
 import numpy as np
 
 from repro import checkpoint as ck
-from repro.configs.logreg_paper import scaled
+from repro import problems
+from repro.api import ExperimentSpec, build, run
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
-from repro.runtime.scheduler import LogRegProblem
+from repro.runtime import PoolConfig, SchedulerConfig
+
+PROBLEM_KW = dict(n_samples=8_192, n_features=512, density=0.02, lam1=0.5,
+                  fista=dict(min_iters=1))
+ADMM = AdmmOptions(max_iters=40)
 
 
-def run(name, scfg, problem, rounds=40):
-    sched = Scheduler(problem, scfg)
-    z = sched.solve(max_rounds=rounds)
-    m = sched.history[-1]
-    obj = problem.objective(z, sched.n_logical)
-    print(f"{name:28s} rounds={len(sched.history):3d} respawns="
-          f"{sched.n_respawns:3d} r={m.r_norm:8.4f} obj={obj:10.3f} "
-          f"sim={m.sim_time:7.1f}s")
-    return sched, z
+def regime(name, scfg, problem, rounds=40):
+    res = run(ExperimentSpec(problem="logreg", problem_kwargs=PROBLEM_KW,
+                             scheduler=scfg, max_rounds=rounds, label=name),
+              problem=problem)
+    obj = problem.objective(res.z, res.scheduler.n_logical)
+    print(f"{name:28s} rounds={res.rounds:3d} respawns="
+          f"{res.n_respawns:3d} r={res.trace[-1]['r_norm']:8.4f} "
+          f"obj={obj:10.3f} sim={res.sim_time_s:7.1f}s")
+    return res
 
 
 def main():
-    cfg = scaled(8_192, 512, density=0.02, lam1=0.5)
-    problem = LogRegProblem(cfg, fista=FistaOptions(min_iters=1))
-    admm = AdmmOptions(max_iters=40)
+    problem = problems.make("logreg", **PROBLEM_KW)
 
     print("== four regimes, same problem ==")
-    run("sync (paper baseline)", SchedulerConfig(
-        n_workers=8, admm=admm, pool=PoolConfig(seed=0)), problem)
-    run("sync + failures/lifetimes", SchedulerConfig(
-        n_workers=8, admm=admm,
+    regime("sync (paper baseline)", SchedulerConfig(
+        n_workers=8, admm=ADMM, pool=PoolConfig(seed=0)), problem)
+    regime("sync + failures/lifetimes", SchedulerConfig(
+        n_workers=8, admm=ADMM,
         pool=PoolConfig(seed=1, fail_rate_per_round=0.04,
                         lifetime_s=60.0)), problem)
-    run("replicated r=2 (coded)", SchedulerConfig(
-        n_workers=8, mode="replicated", replication=2, admm=admm,
+    regime("replicated r=2 (coded)", SchedulerConfig(
+        n_workers=8, mode="replicated", replication=2, admm=ADMM,
         pool=PoolConfig(seed=2, straggler_frac=0.25,
                         straggler_slowdown=4.0)), problem)
-    run("async S=4, tau=4", SchedulerConfig(
+    regime("async S=4, tau=4", SchedulerConfig(
         n_workers=8, mode="async_", async_batch=4, staleness_bound=4,
-        admm=admm, pool=PoolConfig(seed=3)), problem)
+        admm=ADMM, pool=PoolConfig(seed=3)), problem)
 
     print("\n== elastic rescale: W=4 -> 8 mid-run ==")
-    sched = Scheduler(problem, SchedulerConfig(
-        n_workers=4, admm=admm, pool=PoolConfig(seed=4)))
+    _, sched = build(ExperimentSpec(
+        problem="logreg", problem_kwargs=PROBLEM_KW,
+        scheduler=SchedulerConfig(n_workers=4, admm=ADMM,
+                                  pool=PoolConfig(seed=4))),
+        problem=problem)
     for _ in range(6):
         sched.run_round()
     r_before = sched.history[-1].r_norm
@@ -67,16 +72,22 @@ def main():
 
     print("\n== checkpoint / restart ==")
     with tempfile.TemporaryDirectory() as td:
-        sched = Scheduler(problem, SchedulerConfig(
-            n_workers=8, admm=admm, pool=PoolConfig(seed=5)))
+        _, sched = build(ExperimentSpec(
+            problem="logreg", problem_kwargs=PROBLEM_KW,
+            scheduler=SchedulerConfig(n_workers=8, admm=ADMM,
+                                      pool=PoolConfig(seed=5))),
+            problem=problem)
         for _ in range(5):
             sched.run_round()
         state = {"z": sched.z, "x": sched.x, "u": sched.u,
                  "rho": np.float32(sched.rho)}
         ck.save(state, td, sched.k, {"round": sched.k})
         # "the scheduler dies"; a new one restores and continues
-        sched2 = Scheduler(problem, SchedulerConfig(
-            n_workers=8, admm=admm, pool=PoolConfig(seed=6)))
+        _, sched2 = build(ExperimentSpec(
+            problem="logreg", problem_kwargs=PROBLEM_KW,
+            scheduler=SchedulerConfig(n_workers=8, admm=ADMM,
+                                      pool=PoolConfig(seed=6))),
+            problem=problem)
         restored, meta = ck.restore(state, td)
         sched2.z, sched2.x, sched2.u = (restored["z"], restored["x"],
                                         restored["u"])

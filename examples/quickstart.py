@@ -6,47 +6,56 @@ consensus ADMM over a simulated serverless worker pool, and prints the
 residual trace (the paper's Fig. 3) plus the utilization metrics the paper
 measures (idle / compute per worker, cold starts).
 
+The whole driver is one declarative spec through ``repro.api`` — swap
+``problem="logreg"`` for any registered workload (``lasso``, ``svm``,
+``softmax``, or your own ``repro.problems.register`` plugin) and the
+same scheduler, pool, and billing stack carries it.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.configs.logreg_paper import scaled
+from repro.api import ExperimentSpec, run
 from repro.core.admm import AdmmOptions
-from repro.core.fista import FistaOptions
-from repro.runtime import PoolConfig, Scheduler, SchedulerConfig
-from repro.runtime.scheduler import LogRegProblem
+from repro.runtime import PoolConfig, SchedulerConfig
+
+W = 8
 
 
 def main():
     # a 1/40-scale instance of the paper's problem (same density regime)
-    cfg = scaled(n_samples=15_000, n_features=1_000, density=0.01, lam1=1.0)
-    problem = LogRegProblem(cfg, fista=FistaOptions(min_iters=1))
-    W = 8
+    spec = ExperimentSpec(
+        problem="logreg",
+        problem_kwargs=dict(n_samples=15_000, n_features=1_000,
+                            density=0.01, lam1=1.0,
+                            fista=dict(min_iters=1)),
+        scheduler=SchedulerConfig(
+            n_workers=W,
+            admm=AdmmOptions(rho0=1.0, max_iters=100,
+                             eps_primal=2e-2, eps_dual=2e-2),
+            pool=PoolConfig(seed=0, straggler_frac=0.05)))
 
-    sched = Scheduler(problem, SchedulerConfig(
-        n_workers=W,
-        admm=AdmmOptions(rho0=1.0, max_iters=100,
-                         eps_primal=2e-2, eps_dual=2e-2),
-        pool=PoolConfig(seed=0, straggler_frac=0.05)))
-
-    print(f"spawned {W} workers; cold starts: "
-          + ", ".join(f"{c:.1f}s" for c in sched.cold_starts.values()))
-    print(f"{'k':>3} {'r_norm':>10} {'s_norm':>10} {'rho':>8} "
-          f"{'avg comp':>9} {'avg idle':>9} {'sim time':>9}")
+    header_shown = []
 
     def report(m):
+        if not header_shown:
+            header_shown.append(True)
+            print(f"{'k':>3} {'r_norm':>10} {'s_norm':>10} {'rho':>8} "
+                  f"{'avg comp':>9} {'avg idle':>9} {'sim time':>9}")
         print(f"{m.k:3d} {m.r_norm:10.4f} {m.s_norm:10.4f} {m.rho:8.3f} "
               f"{m.t_comp.mean():8.2f}s {m.t_idle.mean():8.2f}s "
               f"{m.sim_time:8.1f}s")
 
-    z = sched.solve(on_round=report)
+    result = run(spec, on_round=report)
 
-    nnz = int(np.sum(np.abs(np.asarray(z)) > 1e-6))
-    print(f"\nconverged in {sched.k} rounds "
-          f"(paper: <= 23 at full scale)")
-    print(f"solution sparsity: {nnz}/{cfg.n_features} nonzeros "
+    print(f"\nspawned {W} workers; cold starts: "
+          + ", ".join(f"{c:.1f}s"
+                      for c in result.scheduler.cold_starts.values()))
+    summary = result.to_dict()
+    print(f"converged in {result.rounds} rounds "
+          f"(paper: <= 23 at full scale), cost=${result.cost_usd:.4f}")
+    print(f"solution sparsity: {summary['z_nnz']}/1000 nonzeros "
           f"(l1 prox at the master, Eq. 6)")
-    print(f"final objective phi(z) = {problem.objective(z, W):.4f}")
+    print(f"final objective phi(z) = "
+          f"{result.problem.objective(result.z, W):.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,166 @@
+"""The unified experiment API: declare a run, get a priced result.
+
+Every benchmark, example, and test used to hand-roll the same loop —
+construct a problem, construct a ``Scheduler``, call ``solve``, walk
+``history``, pretty-print, dump JSON.  This module is that loop, once:
+
+    from repro.api import ExperimentSpec, run
+    from repro.runtime import SchedulerConfig
+
+    result = run(ExperimentSpec(
+        problem="lasso",                          # any registered workload
+        problem_kwargs=dict(n_samples=4096, n_features=256),
+        scheduler=SchedulerConfig(n_workers=8, mode="drop_slowest"),
+    ))
+    result.trace[-1]["r_norm"], result.cost_usd, result.to_json()
+
+``ExperimentSpec`` is declarative — a problem NAME plus JSON-friendly
+kwargs, and the nested scheduler/pool/billing/autoscale dataclasses the
+runtime already speaks — so a spec round-trips through ``to_dict`` and
+an experiment is reproducible from its own artifact.  ``RunResult``
+carries the per-round residual/cost trace, the dollar breakdown, and
+live handles (``problem``, ``scheduler``) for callers that need more
+than the summary (pool statistics, elastic ``rescale`` demos, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro import problems
+from repro.runtime.scheduler import (RoundMetrics, Scheduler,
+                                     SchedulerConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """A complete, declarative description of one run.
+
+    ``problem`` names a registered workload (``repro.problems``);
+    ``problem_kwargs`` are its factory kwargs (keep them
+    JSON-representable — dicts for FistaOptions, strings for dtypes).
+    ``scheduler`` nests everything the runtime knows: barrier mode,
+    fan-in path, compression, pool/provider, billing, autoscale.
+    ``max_rounds`` caps the run (defaults to ``scheduler.admm.max_iters``).
+    """
+    problem: str = "logreg"
+    problem_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    scheduler: SchedulerConfig = SchedulerConfig()
+    max_rounds: Optional[int] = None
+    label: str = ""
+
+    def to_dict(self) -> dict:
+        return {
+            "problem": self.problem,
+            "problem_kwargs": dict(self.problem_kwargs),
+            "scheduler": dataclasses.asdict(self.scheduler),
+            "max_rounds": self.max_rounds,
+            "label": self.label,
+        }
+
+
+def _trace_row(m: RoundMetrics) -> Dict[str, float]:
+    return {
+        "k": m.k, "sim_time": m.sim_time, "r_norm": m.r_norm,
+        "s_norm": m.s_norm, "rho": m.rho, "cost_usd": m.cost_usd,
+        "n_workers": m.n_workers, "n_respawns": m.n_respawns,
+        "round_wall_s": m.round_wall_s, "t_fanin_wait": m.t_fanin_wait,
+        "t_comp_mean": float(m.t_comp.mean()),
+        "t_comp_std": float(m.t_comp.std()),
+        "t_idle_mean": float(m.t_idle.mean()),
+        "t_idle_std": float(m.t_idle.std()),
+        "inner_mean": float(m.inner_iters.mean()),
+    }
+
+
+@dataclasses.dataclass
+class RunResult:
+    """What a run produced: solution, trace, dollars, live handles."""
+    spec: ExperimentSpec
+    problem: Any                      # the WorkerProblem instance
+    scheduler: Scheduler              # live handle (pool stats, rescale...)
+    z: np.ndarray                     # consensus solution
+    trace: List[Dict[str, float]]     # one row per round (see _trace_row)
+    converged: bool                   # hit the ADMM eps pair
+    rounds: int
+    sim_time_s: float
+    cost_usd: float
+    cost_breakdown: Dict[str, float]  # BillingMeter.summary()
+    n_respawns: int
+    w_start: int
+    w_final: int
+    wall_s: float                     # real wall-clock of solve()
+
+    @property
+    def history(self) -> List[RoundMetrics]:
+        """The scheduler's full per-round metrics (per-worker arrays)."""
+        return self.scheduler.history
+
+    def final(self) -> RoundMetrics:
+        return self.scheduler.history[-1]
+
+    def to_dict(self) -> dict:
+        """JSON-safe summary (the live handles and the full z stay out;
+        the spec inside is enough to reproduce the run)."""
+        za = np.asarray(self.z)
+        return {
+            "spec": self.spec.to_dict(),
+            "label": self.spec.label,
+            "problem": self.spec.problem,
+            "converged": self.converged,
+            "rounds": self.rounds,
+            "sim_time_s": self.sim_time_s,
+            "cost_usd": self.cost_usd,
+            "cost_breakdown": dict(self.cost_breakdown),
+            "n_respawns": self.n_respawns,
+            "w_start": self.w_start,
+            "w_final": self.w_final,
+            "z_norm": float(np.linalg.norm(za)),
+            "z_nnz": int(np.sum(np.abs(za) > 1e-6)),
+            "wall_s": self.wall_s,
+            "trace": self.trace,
+        }
+
+    def to_json(self, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, default=float)
+
+
+def build(spec: ExperimentSpec, *, problem=None):
+    """Instantiate (problem, Scheduler) from a spec without running it —
+    the escape hatch for drivers that need mid-run control (manual
+    ``rescale``, checkpoint surgery).  Pass ``problem`` to reuse an
+    existing instance (its shard/solver caches) across runs."""
+    if problem is None:
+        problem = problems.make(spec.problem, **dict(spec.problem_kwargs))
+    return problem, Scheduler(problem, spec.scheduler)
+
+
+def run(spec: ExperimentSpec, *, problem=None,
+        on_round: Optional[Callable[[RoundMetrics], None]] = None
+        ) -> RunResult:
+    """Run a spec end to end.  ``on_round`` fires per round in ALL four
+    barrier modes (async included).  ``problem`` optionally reuses a
+    built instance so sweeps don't regenerate shards or re-jit."""
+    prob, sched = build(spec, problem=problem)
+    t0 = time.time()
+    z = sched.solve(max_rounds=spec.max_rounds, on_round=on_round)
+    wall = time.time() - t0
+    last = sched.history[-1]
+    eps = spec.scheduler.admm
+    return RunResult(
+        spec=spec, problem=prob, scheduler=sched, z=np.asarray(z),
+        trace=[_trace_row(m) for m in sched.history],
+        converged=bool(last.r_norm <= eps.eps_primal
+                       and last.s_norm <= eps.eps_dual),
+        rounds=len(sched.history),
+        sim_time_s=float(last.sim_time),
+        cost_usd=float(sched.meter.total_usd()),
+        cost_breakdown=sched.meter.summary(),
+        n_respawns=sched.n_respawns,
+        w_start=spec.scheduler.n_workers,
+        w_final=sched.cfg.n_workers,
+        wall_s=wall)

@@ -1,0 +1,31 @@
+"""Workload registry: every estimation problem the scheduler can drive.
+
+``repro.problems`` is the public surface of the workload layer:
+
+    from repro import problems
+
+    problems.available()            # ['lasso', 'logreg', 'softmax', 'svm']
+    p = problems.make("lasso", n_samples=4096, n_features=256)
+
+    @problems.register("my_workload")     # the ~100-line plugin path
+    class MyProblem(problems.FistaShardProblem):
+        ...
+
+See ``problems/base.py`` for the WorkerProblem contract and the
+conformance suite contract (``tests/test_problems.py`` runs it against
+every registered workload), and ``docs/ARCHITECTURE.md`` ("adding a
+workload") for the recipe.
+"""
+from repro.problems.base import (FistaShardProblem, WorkerProblem,
+                                 as_fista_options, available, make,
+                                 register, unregister)
+from repro.problems.lasso import LassoProblem
+from repro.problems.logreg import LogRegProblem
+from repro.problems.softmax import SoftmaxProblem
+from repro.problems.svm import SVMProblem
+
+__all__ = [
+    "WorkerProblem", "FistaShardProblem",
+    "register", "unregister", "make", "available", "as_fista_options",
+    "LogRegProblem", "LassoProblem", "SVMProblem", "SoftmaxProblem",
+]

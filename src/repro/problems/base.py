@@ -1,0 +1,237 @@
+"""The workload layer: the ``WorkerProblem`` contract, a name→factory
+registry, and shared scaffolding for shard-partitioned FISTA workloads.
+
+The scheduler (``repro.runtime.scheduler``) is workload-agnostic: it
+drives *any* object satisfying ``WorkerProblem`` through the four barrier
+modes, both fan-in paths, compression, elasticity, and billing.  This
+module is where that genericity becomes usable: a new estimation workload
+is a ~100-line plugin —
+
+    from repro import problems
+
+    @problems.register("my_workload")
+    class MyProblem(problems.FistaShardProblem):
+        def _gen_shard(self, wid, n_workers): ...
+        def _loss_value_and_grad(self, shard): ...
+        def prox_h(self, v, t): ...
+        def h_value(self, z): ...
+
+    repro.api.run(ExperimentSpec(problem="my_workload", ...))
+
+Contract (what the scheduler calls):
+  * ``n_features`` — flat decision-vector length on the wire (matrix
+    variables are flattened; see problems/softmax.py),
+  * ``n_samples(wid, W)`` — shard size, used by the timing model,
+  * ``solve(wid, W, x0, z, u, rho)`` — the Algorithm-2 worker body:
+    ``argmin_x f_w(x) + rho/2 ||x - (z - u)||^2`` warm-started at x0,
+    returning ``(x_new, real_inner_iteration_count)``,
+  * ``prox_h(v, t)`` — the master's prox of the global regularizer h.
+
+Conformance contract (what ``tests/test_problems.py`` additionally checks
+for every REGISTERED workload):
+  * shards partition the dataset: Σ_w n_samples(w, W) == n_samples(0, 1),
+  * ``solve`` decreases the augmented objective (via ``local_value``),
+  * ``prox_h`` is the true prox of ``h_value`` (variational check),
+  * a 4-worker end-to-end ``repro.api.run`` converges.
+
+Registered factories therefore also provide ``local_value(wid, W, x)``
+(the smooth local term f_w), ``h_value(z)`` (the master's regularizer),
+and ``objective(x, W)`` (full φ = Σ f_w + h, for reporting).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Protocol, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fista as fista_mod
+from repro.core.fista import FistaOptions
+from repro.data.logreg import shard_rows
+
+
+class WorkerProblem(Protocol):
+    """The per-worker subproblem: the scheduler is workload-agnostic."""
+
+    n_features: int
+
+    def n_samples(self, wid: int, n_workers: int) -> int: ...
+
+    def solve(self, wid: int, n_workers: int, x0: jnp.ndarray,
+              z: jnp.ndarray, u: jnp.ndarray, rho: float
+              ) -> Tuple[jnp.ndarray, int]:
+        """argmin_x f_w(x) + rho/2 ||x - (z - u)||^2 from x0.
+        Returns (x_new, real inner-iteration count)."""
+        ...
+
+    def prox_h(self, v: jnp.ndarray, t: float) -> jnp.ndarray: ...
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ProblemFactory = Callable[..., WorkerProblem]
+_REGISTRY: Dict[str, ProblemFactory] = {}
+
+
+def register(name: str, factory: Optional[ProblemFactory] = None):
+    """Register a workload factory under ``name``.
+
+    Usable directly (``register("lasso", LassoProblem)``) or as a
+    decorator (``@register("lasso")``).  Factories take keyword arguments
+    only — keep them JSON-representable so an ``ExperimentSpec`` stays
+    declarative (e.g. ``fista=dict(min_iters=1)``, ``dtype="float32"``).
+    """
+    def _do(f: ProblemFactory) -> ProblemFactory:
+        if name in _REGISTRY:
+            raise ValueError(f"problem {name!r} is already registered")
+        _REGISTRY[name] = f
+        return f
+    return _do(factory) if factory is not None else _do
+
+
+def unregister(name: str) -> None:
+    """Remove a registered factory (plugin teardown / tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def make(name: str, **kwargs) -> WorkerProblem:
+    """Instantiate the workload registered under ``name``."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown problem {name!r}; registered: "
+                       f"{available()}") from None
+    return factory(**kwargs)
+
+
+def available() -> list:
+    """Sorted names of every registered workload."""
+    return sorted(_REGISTRY)
+
+
+def as_fista_options(fista: Union[None, dict, FistaOptions]) -> FistaOptions:
+    """Accept a FistaOptions, a JSON-friendly kwargs dict, or None."""
+    if fista is None:
+        return FistaOptions()
+    if isinstance(fista, dict):
+        return FistaOptions(**fista)
+    return fista
+
+
+# ---------------------------------------------------------------------------
+# Shared scaffolding for shard-partitioned smooth-loss workloads
+# ---------------------------------------------------------------------------
+
+
+class FistaShardProblem:
+    """Scaffolding shared by the built-in workloads: a deterministic
+    per-(wid, W) shard cache and one jitted FISTA solver per shard shape
+    over ``f_w + the augmented quadratic`` (rho etc. are traced arguments,
+    so the adaptive penalty does not retrace).
+
+    Subclasses implement ``_gen_shard`` (a pure function of
+    (seed, wid, W) — that is what makes respawn/rescale data-motion-free),
+    ``_loss_value_and_grad`` (jit-safe closure over a shard), ``prox_h``
+    and ``h_value``.  Everything else — solve, caching, conformance
+    helpers — is inherited.
+    """
+
+    def __init__(self, n_samples: int, n_features: int, *, seed: int = 0,
+                 fista=None, fixed_inner: Optional[int] = None,
+                 dtype="float32"):
+        self.total_samples = int(n_samples)
+        self.n_features = int(n_features)
+        self.seed = int(seed)
+        self.fista = as_fista_options(fista)
+        self.fixed_inner = fixed_inner
+        self.dtype = jnp.dtype(dtype)
+        self._shard_cache: Dict[Tuple[int, int], Tuple] = {}
+        self._solver_cache: Dict[Tuple, Callable] = {}
+
+    # -- subclass hooks -----------------------------------------------------
+    def _gen_shard(self, wid: int, n_workers: int):
+        """Worker ``wid``'s data, a pure function of (seed, wid, W)."""
+        raise NotImplementedError
+
+    def _loss_value_and_grad(self, shard) -> Callable:
+        """vg(x) -> (f_w(x), grad f_w(x)); must be jit-traceable."""
+        raise NotImplementedError
+
+    def prox_h(self, v: jnp.ndarray, t: float) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def h_value(self, z: jnp.ndarray) -> float:
+        """The master's regularizer h(z) (conformance contract)."""
+        raise NotImplementedError
+
+    # -- shared machinery ---------------------------------------------------
+    def _row_keys(self, lo: int, hi: int):
+        """Per-GLOBAL-row PRNG keys: sample identity is tied to the global
+        row index, so re-sharding W -> W' partitions the same dataset."""
+        base = jax.random.PRNGKey(self.seed)
+        return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(lo, hi))
+
+    def _aux_key(self, tag: int):
+        """Keys for shard-independent draws (ground truth, class means):
+        offset past every row index so they never collide with a sample."""
+        base = jax.random.PRNGKey(self.seed)
+        return jax.random.fold_in(base, self.total_samples + tag)
+
+    def n_samples(self, wid: int, n_workers: int) -> int:
+        lo, hi = shard_rows(self.total_samples, n_workers, wid)
+        return hi - lo
+
+    def _shard(self, wid: int, n_workers: int):
+        key = (wid, n_workers)
+        if key not in self._shard_cache:
+            self._shard_cache[key] = self._gen_shard(wid, n_workers)
+        return self._shard_cache[key]
+
+    def _solver(self, shape_key: Tuple) -> Callable:
+        if shape_key not in self._solver_cache:
+            fista_opts = self.fista
+            fixed = self.fixed_inner
+
+            @jax.jit
+            def run(shard, x0, z, u, rho):
+                vg = self._loss_value_and_grad(shard)
+                center = z - u
+
+                def aug(x):
+                    f, g = vg(x)
+                    dx = x - center
+                    return f + 0.5 * rho * jnp.vdot(dx, dx), g + rho * dx
+
+                if fixed is not None:
+                    x_new, info = fista_mod.fista_fixed(aug, x0, fixed,
+                                                        fista_opts)
+                else:
+                    x_new, info = fista_mod.fista(aug, x0, fista_opts)
+                return x_new, info.k
+
+            self._solver_cache[shape_key] = run
+        return self._solver_cache[shape_key]
+
+    def solve(self, wid, n_workers, x0, z, u, rho):
+        shard = self._shard(wid, n_workers)
+        shapes = tuple(a.shape for a in jax.tree_util.tree_leaves(shard))
+        run = self._solver(shapes)
+        x_new, k = run(shard, x0, z, u, jnp.asarray(rho, self.dtype))
+        return x_new, int(k)
+
+    # -- conformance / reporting --------------------------------------------
+    def local_value(self, wid: int, n_workers: int, x) -> float:
+        """The smooth local term f_w(x) (conformance contract)."""
+        vg = self._loss_value_and_grad(self._shard(wid, n_workers))
+        f, _ = vg(x)
+        return float(f)
+
+    def objective(self, x, n_workers: int) -> float:
+        """Full phi(x) = sum_w f_w(x) + h(x) for convergence reporting."""
+        total = float(self.h_value(x))
+        for w in range(n_workers):
+            total += self.local_value(w, n_workers, x)
+        return total

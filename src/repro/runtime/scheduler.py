@@ -46,38 +46,24 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, NamedTuple, Optional, Protocol, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import admm
 from repro.core.admm import AdmmOptions, WorkerState
-from repro.core.fista import FistaOptions
 from repro.optim.compression import OmegaCodec, message_bytes
+from repro.problems.base import WorkerProblem
+# deprecation re-export: LogRegProblem moved to repro.problems.logreg;
+# `from repro.runtime.scheduler import LogRegProblem` keeps working, new
+# code should import from repro.problems
+from repro.problems.logreg import LogRegProblem  # noqa: F401
 from repro.runtime.autoscale import AutoscaleConfig, Autoscaler
 from repro.runtime.billing import BillingConfig, BillingMeter
 from repro.runtime.pool import LambdaPool, PoolConfig
 from repro.runtime.reduce import TreeConfig, fanin_drain
-
-
-class WorkerProblem(Protocol):
-    """The per-worker subproblem: the scheduler is workload-agnostic."""
-
-    n_features: int
-
-    def n_samples(self, wid: int, n_workers: int) -> int: ...
-
-    def solve(self, wid: int, n_workers: int, x0: jnp.ndarray,
-              z: jnp.ndarray, u: jnp.ndarray, rho: float
-              ) -> Tuple[jnp.ndarray, int]:
-        """argmin_x f_w(x) + rho/2 ||x - (z - u)||^2 from x0.
-        Returns (x_new, real inner-iteration count)."""
-        ...
-
-    def prox_h(self, v: jnp.ndarray, t: float) -> jnp.ndarray: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -388,9 +374,11 @@ class Scheduler:
         return m
 
     # ------------------------------------------------------------------
-    def run_async(self, max_updates: int) -> List[RoundMetrics]:
+    def run_async(self, max_updates: int,
+                  on_round: Optional[Callable] = None) -> List[RoundMetrics]:
         """Bounded-staleness async ADMM: master updates z every
-        ``async_batch`` arrivals; workers beyond ``staleness_bound`` block."""
+        ``async_batch`` arrivals; workers beyond ``staleness_bound`` block.
+        ``on_round`` fires once per z-update, like the sync family."""
         cfg = self.cfg
         W = cfg.n_workers
         z_version = 0
@@ -468,6 +456,8 @@ class Scheduler:
                     slowest10=np.zeros(W, bool),
                     cost_usd=self.meter.total_usd(), n_workers=W)
                 self.history.append(m)
+                if on_round:
+                    on_round(m)
                 # unblock stale workers: the z-update IS the rebroadcast —
                 # every blocked worker receives the fresh z and relaunches
                 # at the current version.  (The bound is re-checked at each
@@ -492,7 +482,7 @@ class Scheduler:
         cfg = self.cfg
         K = max_rounds or cfg.admm.max_iters
         if cfg.mode == "async_":
-            self.run_async(K)
+            self.run_async(K, on_round=on_round)
             return self.z
         if cfg.autoscale.policy != "off" and self.autoscaler is None:
             self.autoscaler = Autoscaler(cfg.autoscale, quantum=self.repl)
@@ -546,113 +536,3 @@ class Scheduler:
         for w in self.pool.workers.values():
             self.meter.record_duration(self.sim_time - w.ready_at)
         self.meter.record_master(self.sim_time - t0)
-
-
-# ---------------------------------------------------------------------------
-# The paper's workload as a WorkerProblem
-# ---------------------------------------------------------------------------
-
-
-class LogRegProblem:
-    """l1-logistic regression on sparse Koh-Kim-Boyd shards (Section III)."""
-
-    def __init__(self, logreg_cfg, *, fista: FistaOptions = FistaOptions(),
-                 fixed_inner: Optional[int] = None, dtype=jnp.float32):
-        from repro.configs.logreg_paper import LogRegConfig  # noqa
-        from repro.data import logreg as data_mod
-        self.cfg = logreg_cfg
-        self.fista = fista
-        self.fixed_inner = fixed_inner
-        self.dtype = dtype            # f64 reproduces the paper's absolute
-                                      # tolerances; f32 hits a precision
-                                      # floor near r ~ 1e-1 (EXPERIMENTS.md)
-        self.n_features = logreg_cfg.n_features
-        self._data = data_mod
-        self._shard_cache: Dict[Tuple[int, int], Tuple] = {}
-        self._solver_cache: Dict[Tuple[int, int], Callable] = {}
-
-    def n_samples(self, wid: int, n_workers: int) -> int:
-        lo, hi = self._data.shard_rows(self.cfg.n_samples, n_workers, wid)
-        return hi - lo
-
-    def _shard(self, wid: int, W: int):
-        key = (wid, W)
-        if key not in self._shard_cache:
-            idx, vals, b = self._load_or_gen(wid, W)
-            self._shard_cache[key] = (idx, vals.astype(self.dtype),
-                                      b.astype(self.dtype))
-        return self._shard_cache[key]
-
-    def _load_or_gen(self, wid: int, W: int):
-        """Disk-cache the generated shards (generation of the full paper
-        instance costs ~3 min; reruns should not pay it again)."""
-        import os
-        import numpy as np
-        c = self.cfg
-        cache_dir = os.environ.get("REPRO_DATA_CACHE", "")
-        if not cache_dir:
-            return self._data.worker_shard_sparse(c, wid, W)
-        os.makedirs(cache_dir, exist_ok=True)
-        tag = (f"logreg_n{c.n_samples}_d{c.n_features}_p{c.density}"
-               f"_s{c.seed}_w{wid}of{W}.npz")
-        path = os.path.join(cache_dir, tag)
-        if os.path.exists(path):
-            with np.load(path) as z:
-                return (jnp.asarray(z["idx"]), jnp.asarray(z["vals"]),
-                        jnp.asarray(z["b"]))
-        idx, vals, b = self._data.worker_shard_sparse(c, wid, W)
-        np.savez(path, idx=np.asarray(idx), vals=np.asarray(vals),
-                 b=np.asarray(b))
-        return idx, vals, b
-
-    def _solver(self, shard_shape: Tuple[int, int]) -> Callable:
-        """One jitted FISTA per shard shape (rho etc. are traced args, so
-        the adaptive penalty does NOT retrace)."""
-        if shard_shape not in self._solver_cache:
-            d = self.cfg.n_features
-            fista_opts = self.fista
-            fixed = self.fixed_inner
-            from repro.core import fista as fista_mod
-
-            @jax.jit
-            def run(idx, vals, b, x0, z, u, rho):
-                vg = self._data.sparse_logistic_value_and_grad(
-                    idx, vals, b, d)
-                center = z - u
-
-                def aug(x):
-                    f, g = vg(x)
-                    dx = x - center
-                    return f + 0.5 * rho * jnp.vdot(dx, dx), g + rho * dx
-
-                if fixed is not None:
-                    x_new, info = fista_mod.fista_fixed(aug, x0, fixed,
-                                                        fista_opts)
-                else:
-                    x_new, info = fista_mod.fista(aug, x0, fista_opts)
-                return x_new, info.k
-
-            self._solver_cache[shard_shape] = run
-        return self._solver_cache[shard_shape]
-
-    def solve(self, wid, n_workers, x0, z, u, rho):
-        idx, vals, b = self._shard(wid, n_workers)
-        run = self._solver(idx.shape)
-        x_new, k = run(idx, vals, b, x0, z, u,
-                       jnp.asarray(rho, self.dtype))
-        return x_new, int(k)
-
-    def prox_h(self, v, t):
-        from repro.core import prox
-        return prox.prox_l1(v, t, self.cfg.lam1)
-
-    def objective(self, x, n_workers: int) -> float:
-        """Full phi(x) for convergence reporting."""
-        total = self.cfg.lam1 * float(jnp.sum(jnp.abs(x)))
-        for w in range(n_workers):
-            idx, vals, b = self._shard(w, n_workers)
-            vg = self._data.sparse_logistic_value_and_grad(
-                idx, vals, b, self.cfg.n_features)
-            f, _ = vg(x)
-            total += float(f)
-        return total

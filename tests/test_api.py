@@ -1,0 +1,165 @@
+"""The unified experiment API (repro.api) and the refactor guard.
+
+The load-bearing test is the SEED-EQUIVALENCE ANCHOR: the logreg default
+path through ``ExperimentSpec`` must be byte-identical to the
+pre-registry scheduler (PR 2, commit 0064cd7) — the literal
+(r_norm, s_norm, cost_usd) trace below was captured by running the
+pre-refactor ``LogRegProblem`` + ``Scheduler`` driver on this instance.
+If this test fails, the problems/ + api refactor changed the math or the
+billing, not just the plumbing.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import problems
+from repro.api import ExperimentSpec, RunResult, build, run
+from repro.core.admm import AdmmOptions
+from repro.runtime import PoolConfig, SchedulerConfig
+
+LASSO_KW = dict(n_samples=512, n_features=48)
+
+# (r_norm, s_norm, cost_usd) per round: W=8, pool seed 0, 10 rounds,
+# logreg factory defaults (n=2048, d=128, density=0.05, lam1=0.3,
+# fista=dict(min_iters=1, eps_grad=1e-3)) — captured pre-refactor.
+SEED_ANCHOR = [
+    (0.0, 13.201300621032715, 0.0010144508216988549),
+    (11.932383853995265, 4.236271381378174, 0.0013158071179319533),
+    (12.88325591333444, 1.9042096138000488, 0.0014856387707572114),
+    (8.982401198139186, 0.8580136299133301, 0.0017625651535820726),
+    (6.819595439048109, 1.048970103263855, 0.0019976400505556224),
+    (3.2919844924624075, 0.792803168296814, 0.002134653934589675),
+    (2.3127414667514135, 0.557543933391571, 0.0022718106026063654),
+    (1.6750130259662122, 0.3895891010761261, 0.0024143724616859197),
+    (1.2386451751997671, 0.26751938462257385, 0.0025515291297026096),
+    (0.9311294872917343, 0.18071593344211578, 0.0026837265396113994),
+]
+
+
+def test_logreg_default_trace_byte_identical_to_seed():
+    res = run(ExperimentSpec(
+        scheduler=SchedulerConfig(n_workers=8,
+                                  admm=AdmmOptions(max_iters=40),
+                                  pool=PoolConfig(seed=0)),
+        max_rounds=10))
+    got = [(t["r_norm"], t["s_norm"], t["cost_usd"]) for t in res.trace]
+    assert len(got) == len(SEED_ANCHOR)
+    np.testing.assert_array_equal(np.asarray(got, np.float64),
+                                  np.asarray(SEED_ANCHOR, np.float64))
+
+
+def test_default_spec_is_the_anchored_instance():
+    """The bare factory defaults ARE the anchored instance — guard them."""
+    p = problems.make("logreg")
+    assert p.cfg.n_samples == 2048 and p.cfg.n_features == 128
+    assert p.cfg.density == 0.05 and p.cfg.lam1 == 0.3
+    assert p.fista.min_iters == 1 and p.fista.eps_grad == 1e-3
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    return problems.make("lasso", **LASSO_KW)
+
+
+@pytest.mark.parametrize("fanin", ["flat", "tree"])
+@pytest.mark.parametrize("mode",
+                         ["sync", "drop_slowest", "replicated", "async_"])
+def test_api_runs_every_mode_and_fanin(lasso, mode, fanin):
+    """Acceptance matrix: run() completes under all four barrier modes x
+    both fan-in paths, and on_round fires once per round EVERYWHERE —
+    including async_, whose solve() used to drop the callback."""
+    rounds = 20 if mode == "async_" else 6
+    calls = []
+    res = run(ExperimentSpec(
+        problem="lasso", problem_kwargs=LASSO_KW,
+        scheduler=SchedulerConfig(
+            n_workers=4, mode=mode, replication=2, drop_frac=0.25,
+            async_batch=2, fanin=fanin,
+            admm=AdmmOptions(max_iters=rounds), pool=PoolConfig(seed=1)),
+        max_rounds=rounds), problem=lasso, on_round=lambda m: calls.append(m.k))
+    assert res.rounds == len(res.trace) == len(calls) > 0
+    assert np.all(np.isfinite([t["r_norm"] for t in res.trace]))
+    assert res.cost_usd > 0
+
+
+def test_async_on_round_callback_fires(lasso):
+    """Regression: async_ solve() silently ignored on_round."""
+    seen = []
+    res = run(ExperimentSpec(
+        problem="lasso", problem_kwargs=LASSO_KW,
+        scheduler=SchedulerConfig(n_workers=4, mode="async_",
+                                  async_batch=2,
+                                  admm=AdmmOptions(max_iters=8),
+                                  pool=PoolConfig(seed=2)),
+        max_rounds=8), problem=lasso, on_round=lambda m: seen.append(m))
+    assert len(seen) == len(res.history) == 8
+    assert [m.k for m in seen] == [m.k for m in res.history]
+
+
+def test_run_result_to_json_roundtrips(lasso):
+    res = run(ExperimentSpec(
+        problem="lasso", problem_kwargs=LASSO_KW,
+        scheduler=SchedulerConfig(n_workers=4,
+                                  admm=AdmmOptions(max_iters=4),
+                                  pool=PoolConfig(seed=0)),
+        max_rounds=4, label="roundtrip"), problem=lasso)
+    assert isinstance(res, RunResult)
+    d = json.loads(res.to_json())
+    assert d["label"] == "roundtrip"
+    assert d["spec"]["problem"] == "lasso"
+    assert d["spec"]["problem_kwargs"] == LASSO_KW
+    assert d["spec"]["scheduler"]["n_workers"] == 4
+    assert d["spec"]["scheduler"]["pool"]["seed"] == 0
+    assert len(d["trace"]) == d["rounds"] == 4
+    for key in ("r_norm", "s_norm", "rho", "cost_usd", "sim_time"):
+        assert key in d["trace"][0]
+    assert d["cost_breakdown"]["total_usd"] == pytest.approx(d["cost_usd"])
+    # the spec inside the artifact reproduces the run
+    spec2 = ExperimentSpec(problem=d["spec"]["problem"],
+                           problem_kwargs=d["spec"]["problem_kwargs"],
+                           scheduler=res.spec.scheduler,
+                           max_rounds=d["max_rounds"] if "max_rounds" in d
+                           else res.spec.max_rounds)
+    res2 = run(spec2, problem=lasso)
+    assert res2.trace[-1]["r_norm"] == res.trace[-1]["r_norm"]
+
+
+def test_build_gives_mid_run_control(lasso):
+    prob, sched = build(ExperimentSpec(
+        problem="lasso", problem_kwargs=LASSO_KW,
+        scheduler=SchedulerConfig(n_workers=4,
+                                  admm=AdmmOptions(max_iters=10),
+                                  pool=PoolConfig(seed=3))), problem=lasso)
+    assert prob is lasso
+    for _ in range(2):
+        sched.run_round()
+    sched.rescale(8)
+    assert sched.cfg.n_workers == 8
+    m = sched.run_round()
+    assert m.n_workers == 8
+
+
+def test_run_without_prebuilt_problem_builds_from_registry():
+    res = run(ExperimentSpec(
+        problem="lasso", problem_kwargs=LASSO_KW,
+        scheduler=SchedulerConfig(n_workers=4,
+                                  admm=AdmmOptions(max_iters=3),
+                                  pool=PoolConfig(seed=0)),
+        max_rounds=3))
+    assert res.problem.n_features == LASSO_KW["n_features"]
+    assert res.rounds == 3
+
+
+def test_converged_flag_tracks_eps():
+    res = run(ExperimentSpec(
+        problem="lasso", problem_kwargs=LASSO_KW,
+        scheduler=SchedulerConfig(
+            n_workers=4,
+            admm=AdmmOptions(max_iters=60, eps_primal=5e-2, eps_dual=5e-2),
+            pool=PoolConfig(seed=0))))
+    last = res.trace[-1]
+    assert res.converged == (last["r_norm"] <= 5e-2
+                             and last["s_norm"] <= 5e-2)
+    assert res.converged
+    assert res.rounds < 60
