@@ -1,0 +1,111 @@
+"""Engine scaling: simulator wall-clock per round, loop vs batched.
+
+The loop engine pays one jitted dispatch per worker per round, so the
+fig4-style sweeps stop being affordable right around the paper's own
+W=256 ceiling — the system, not the algorithm, is the bottleneck.  The
+batched engine (``SchedulerConfig(engine="batched")``) runs all W solves
+as ONE vmapped XLA call; this benchmark measures the real wall-clock per
+simulated round for both engines across W ∈ {64, 256, 1024, 4096} and
+checks the headline target: >= 10x at W=1024.
+
+  python benchmarks/bench_scale.py                 # full sweep + JSON
+  python benchmarks/bench_scale.py --w-list 64,256 --rounds 2
+  python benchmarks/bench_scale.py --strict        # exit 1 if target unmet
+
+Wall-clock numbers are machine-dependent — the JSON artifact is for the
+CI log and the speedup RATIO, not for the regression baselines (only
+deterministic simulator metrics are pinned there).
+"""
+import argparse
+import time
+
+from benchmarks.common import emit
+from repro import problems
+from repro.api import ExperimentSpec, build
+from repro.core.admm import AdmmOptions
+from repro.runtime import PoolConfig, SchedulerConfig
+
+TARGET_W = 1024
+TARGET_SPEEDUP = 10.0
+
+
+def time_engine(prob, problem_name, pkw, W: int, engine: str,
+                rounds: int) -> dict:
+    """Build a fresh scheduler, run one warmup round (jit compile +
+    batch stacking), then time ``rounds`` rounds of simulator work."""
+    spec = ExperimentSpec(
+        problem=problem_name, problem_kwargs=pkw,
+        scheduler=SchedulerConfig(
+            n_workers=W, engine=engine,
+            admm=AdmmOptions(max_iters=rounds + 1),
+            pool=PoolConfig(seed=0)))
+    t0 = time.perf_counter()
+    _, sched = build(spec, problem=prob)
+    sched.run_round()
+    build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        sched.run_round()
+    round_s = (time.perf_counter() - t0) / rounds
+    return {"build_s": build_s, "round_s": round_s,
+            "r_norm": float(sched.history[-1].r_norm),
+            "sim_round_s": float(sched.history[-1].round_wall_s)}
+
+
+def main(args=None) -> dict:
+    if args is None:
+        args = argparse.Namespace(w_list="64,256,1024,4096", rounds=3,
+                                  strict=False)
+    ws = [int(s) for s in args.w_list.split(",") if s.strip()]
+    # 2 samples per worker at the largest W: the per-round cost is then
+    # dispatch/stacking overhead, which is exactly what the engines differ
+    # in (fixed_inner pins the solve work so both engines do equal math)
+    pkw = dict(n_samples=2 * max(ws), n_features=128, density=0.05,
+               lam1=0.05, fista=dict(min_iters=1), fixed_inner=5)
+    prob = problems.make("logreg", **pkw)
+
+    results = {"workload": "logreg", "problem_kwargs": pkw,
+               "rounds": args.rounds, "per_w": {}}
+    print(f"[bench_scale] logreg d={pkw['n_features']} "
+          f"n={pkw['n_samples']} rounds={args.rounds}")
+    print(f"  {'W':>5s}  {'loop s/round':>12s}  {'batched s/round':>15s}  "
+          f"{'speedup':>7s}")
+    for W in ws:
+        row = {}
+        for engine in ("loop", "batched"):
+            row[engine] = time_engine(prob, "logreg", pkw, W, engine,
+                                      args.rounds)
+        # identical math -> the simulated round must agree across engines
+        assert abs(row["loop"]["r_norm"] - row["batched"]["r_norm"]) \
+            <= 1e-3 * max(abs(row["loop"]["r_norm"]), 1e-9), \
+            f"engine divergence at W={W}: {row}"
+        row["speedup"] = row["loop"]["round_s"] / row["batched"]["round_s"]
+        results["per_w"][W] = row
+        print(f"  {W:5d}  {row['loop']['round_s']:12.4f}  "
+              f"{row['batched']['round_s']:15.4f}  {row['speedup']:6.1f}x")
+
+    met = None
+    if TARGET_W in results["per_w"]:
+        s = results["per_w"][TARGET_W]["speedup"]
+        met = s >= TARGET_SPEEDUP
+        mark = "OK" if met else "BELOW TARGET"
+        print(f"[bench_scale] W={TARGET_W}: {s:.1f}x vs >= "
+              f"{TARGET_SPEEDUP:.0f}x target — {mark}")
+    results["target"] = {"w": TARGET_W, "min_speedup": TARGET_SPEEDUP,
+                         "met": met}
+    emit("bench_scale", results)
+    if args.strict and met is False:
+        raise SystemExit(1)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--w-list", default="64,256,1024,4096",
+                    help="comma-separated worker counts to sweep")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="timed rounds per (W, engine) after 1 warmup")
+    ap.add_argument("--strict", action="store_true",
+                    help=f"exit 1 if the W={TARGET_W} speedup target "
+                         "is not met (wall-clock — noisy on shared CI)")
+    main(ap.parse_args())

@@ -1,0 +1,154 @@
+"""Benchmark-regression gate: pin the simulator's anchor metrics.
+
+The benchmark smokes in CI emit ``experiments/*.json``; this gate
+compares a curated set of metrics from those artifacts against committed
+baselines in ``benchmarks/baselines/baselines.json`` and fails loudly —
+exit 2 with a per-metric diff table — when any drifts past its relative
+tolerance.  The point: the paper anchors (the fig4/5 tree+topk
+E(256)≈0.71 recovery, the fig8 cold/warm start latencies) are the repo's
+headline numbers, and a change that silently moves them is a regression
+even when every unit test stays green.
+
+The simulator is deterministic for a fixed ``PoolConfig(seed=...)``, so
+tolerances are tight; they exist to absorb cross-platform/JAX-version
+float drift and the batched engine's allclose-not-bitwise reductions —
+NOT to absorb model changes.  Wall-clock metrics are never pinned.
+
+Usage:
+
+  python benchmarks/check_regression.py            # gate: exit 0 ok, 2 breach
+  python benchmarks/check_regression.py --update   # re-pin from current runs
+  python benchmarks/check_regression.py --experiments DIR --baselines FILE
+
+To refresh baselines after an INTENTIONAL model change: re-run the smoke
+benchmarks (see .github/workflows/ci.yml for the exact commands), run
+``--update``, and commit the new baselines.json alongside the change
+that moved the numbers.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_EXPERIMENTS = ROOT / "experiments"
+DEFAULT_BASELINES = ROOT / "benchmarks" / "baselines" / "baselines.json"
+
+# (artifact file, "."-joined key path into its JSON, relative tolerance).
+# rtol=0 means exact match (for counts/fractions that must not move).
+SPEC = [
+    # fig4/5 fan-in fix: hierarchical tree + topk compression recovers the
+    # W=256 efficiency cliff (paper Fig 5: flat/none collapses to ~0.26)
+    ("fig5_fanin_efficiency.json", "tree/topk.256.efficiency", 0.05),
+    ("fig5_fanin_efficiency.json", "tree/topk.64.efficiency", 0.05),
+    ("fig5_fanin_efficiency.json", "tree/topk.256.sim_round_s", 0.05),
+    ("fig5_fanin_efficiency.json", "tree/topk.256.r_norm", 0.10),
+    # fig8 cold-start model: fastest/slowest/mean at W=256, and the
+    # provider's warm keep-alive path (sub-second starts, all-warm hits)
+    ("fig8_coldstart.json", "256.fastest_s", 0.03),
+    ("fig8_coldstart.json", "256.slowest_s", 0.03),
+    ("fig8_coldstart.json", "256.mean_s", 0.03),
+    ("fig8_coldstart.json", "warm_reuse.256.mean_s", 0.05),
+    ("fig8_coldstart.json", "warm_reuse.256.warm_hit_frac", 0.0),
+]
+
+
+def resolve(doc, path: str):
+    """Walk a '.'-joined key path ('tree/topk.256.efficiency')."""
+    node = doc
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(path)
+        node = node[part]
+    return float(node)
+
+
+def current_values(spec, experiments_dir: Path):
+    """(values, errors): metric values from the artifacts on disk."""
+    values, errors = {}, []
+    docs = {}
+    for artifact, path, _ in spec:
+        if artifact not in docs:
+            f = experiments_dir / artifact
+            try:
+                docs[artifact] = json.loads(f.read_text())
+            except FileNotFoundError:
+                docs[artifact] = None
+                errors.append(f"missing artifact {f} — run the benchmark "
+                              f"smokes first (see ci.yml)")
+        if docs[artifact] is None:
+            continue
+        try:
+            values[(artifact, path)] = resolve(docs[artifact], path)
+        except KeyError:
+            errors.append(f"{artifact}: no metric at {path!r}")
+    return values, errors
+
+
+def main(argv=None, spec=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare benchmark artifacts against pinned baselines")
+    ap.add_argument("--experiments", type=Path, default=DEFAULT_EXPERIMENTS)
+    ap.add_argument("--baselines", type=Path, default=DEFAULT_BASELINES)
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin every SPEC metric from the current "
+                         "artifacts and rewrite the baselines file")
+    args = ap.parse_args(argv)
+    spec = SPEC if spec is None else spec
+
+    values, errors = current_values(spec, args.experiments)
+    if errors:
+        for e in errors:
+            print(f"[check_regression] ERROR: {e}")
+        return 2
+
+    if args.update:
+        doc = {}
+        for artifact, path, _ in spec:
+            doc.setdefault(artifact, {})[path] = values[(artifact, path)]
+        args.baselines.parent.mkdir(parents=True, exist_ok=True)
+        args.baselines.write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"[check_regression] pinned {len(values)} metrics "
+              f"-> {args.baselines}")
+        return 0
+
+    try:
+        baselines = json.loads(args.baselines.read_text())
+    except FileNotFoundError:
+        print(f"[check_regression] ERROR: no baselines at {args.baselines}"
+              f" — run with --update to pin them")
+        return 2
+
+    rows, breaches = [], 0
+    for artifact, path, rtol in spec:
+        cur = values[(artifact, path)]
+        base = baselines.get(artifact, {}).get(path)
+        if base is None:
+            rows.append((artifact, path, "UNPINNED", cur, "-", rtol, "FAIL"))
+            breaches += 1
+            continue
+        rel = abs(cur - base) / max(abs(base), 1e-12)
+        ok = rel <= rtol
+        breaches += 0 if ok else 1
+        rows.append((artifact, path, f"{base:.6g}", cur, f"{rel:.2%}",
+                     rtol, "ok" if ok else "BREACH"))
+
+    wa = max(len(r[0]) for r in rows)
+    wp = max(len(r[1]) for r in rows)
+    print(f"{'artifact':<{wa}}  {'metric':<{wp}}  {'baseline':>10s}  "
+          f"{'current':>10s}  {'rel-diff':>8s}  {'rtol':>6s}  status")
+    for artifact, path, base, cur, rel, rtol, status in rows:
+        print(f"{artifact:<{wa}}  {path:<{wp}}  {base:>10s}  "
+              f"{cur:>10.6g}  {rel:>8s}  {rtol:>6.0%}  {status}")
+    if breaches:
+        print(f"[check_regression] {breaches} metric(s) out of tolerance — "
+              f"if the change is intentional, refresh with --update and "
+              f"commit the new baselines")
+        return 2
+    print(f"[check_regression] all {len(rows)} pinned metrics within "
+          f"tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,9 +24,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_admm_vs_sgd, bench_compression, bench_cost,
-                            bench_kernels, bench_workloads, fig3_convergence,
-                            fig4_speedup, fig67_histograms, fig8_coldstart,
-                            roofline)
+                            bench_kernels, bench_scale, bench_workloads,
+                            fig3_convergence, fig4_speedup, fig67_histograms,
+                            fig8_coldstart, roofline)
 
     jobs = [
         ("kernels", lambda: bench_kernels.main()),
@@ -37,6 +37,7 @@ def main(argv=None) -> None:
         ("compression", lambda: bench_compression.main()),
         ("bench_cost", lambda: bench_cost.main()),
         ("bench_workloads", lambda: bench_workloads.main()),
+        ("bench_scale", lambda: bench_scale.main()),
         ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),
         ("roofline", lambda: roofline.main()),
     ]

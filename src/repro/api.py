@@ -44,7 +44,10 @@ class ExperimentSpec:
     ``problem_kwargs`` are its factory kwargs (keep them
     JSON-representable — dicts for FistaOptions, strings for dtypes).
     ``scheduler`` nests everything the runtime knows: barrier mode,
-    fan-in path, compression, pool/provider, billing, autoscale.
+    execution engine (``engine="batched"`` for one-XLA-call rounds at
+    large W — allclose to the default loop engine, see
+    tests/test_engine.py), fan-in path, compression, pool/provider,
+    billing, autoscale.
     ``max_rounds`` caps the run (defaults to ``scheduler.admm.max_iters``).
     """
     problem: str = "logreg"

@@ -16,16 +16,16 @@ conformance suite contract (``tests/test_problems.py`` runs it against
 every registered workload), and ``docs/ARCHITECTURE.md`` ("adding a
 workload") for the recipe.
 """
-from repro.problems.base import (FistaShardProblem, WorkerProblem,
-                                 as_fista_options, available, make,
-                                 register, unregister)
+from repro.problems.base import (BatchedShardProblem, FistaShardProblem,
+                                 WorkerProblem, as_fista_options, available,
+                                 make, register, unregister)
 from repro.problems.lasso import LassoProblem
 from repro.problems.logreg import LogRegProblem
 from repro.problems.softmax import SoftmaxProblem
 from repro.problems.svm import SVMProblem
 
 __all__ = [
-    "WorkerProblem", "FistaShardProblem",
+    "WorkerProblem", "FistaShardProblem", "BatchedShardProblem",
     "register", "unregister", "make", "available", "as_fista_options",
     "LogRegProblem", "LassoProblem", "SVMProblem", "SoftmaxProblem",
 ]

@@ -27,6 +27,11 @@ Contract (what the scheduler calls):
     returning ``(x_new, real_inner_iteration_count)``,
   * ``prox_h(v, t)`` — the master's prox of the global regularizer h.
 
+Batched-engine contract (optional; ``SchedulerConfig(engine="batched")``):
+  * ``solve_all(xs, us, z, rho)`` — all W worker bodies in ONE jitted,
+    vmapped device call; provided by the ``BatchedShardProblem`` mixin
+    for any workload that implements ``_masked_loss_value_and_grad``.
+
 Conformance contract (what ``tests/test_problems.py`` additionally checks
 for every REGISTERED workload):
   * shards partition the dataset: Σ_w n_samples(w, W) == n_samples(0, 1),
@@ -44,6 +49,7 @@ from typing import Callable, Dict, Optional, Protocol, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fista as fista_mod
 from repro.core.fista import FistaOptions
@@ -120,12 +126,151 @@ def as_fista_options(fista: Union[None, dict, FistaOptions]) -> FistaOptions:
     return fista
 
 
+def solve_augmented(vg: Callable, x0, center, rho, fixed: Optional[int],
+                    fista_opts: FistaOptions):
+    """The Algorithm-2 worker body shared by both execution engines:
+    minimize  f(x) + rho/2 ||x - center||^2  from x0 via FISTA (adaptive,
+    or ``fista_fixed`` when ``fixed`` is set).  Jit-traceable; returns
+    (x_new, inner-iteration count)."""
+    def aug(x):
+        f, g = vg(x)
+        dx = x - center
+        return f + 0.5 * rho * jnp.vdot(dx, dx), g + rho * dx
+
+    if fixed is not None:
+        x_new, info = fista_mod.fista_fixed(aug, x0, fixed, fista_opts)
+    else:
+        x_new, info = fista_mod.fista(aug, x0, fista_opts)
+    return x_new, info.k
+
+
+# ---------------------------------------------------------------------------
+# Batched execution: all W subproblems in one XLA call
+# ---------------------------------------------------------------------------
+
+
+class BatchedShardProblem:
+    """The batched execution engine's problem-side contract, as a mixin.
+
+    The loop engine costs W device dispatches per round (one jitted
+    ``solve`` per worker); past W≈256 the dispatch overhead — not the
+    math — dominates simulator wall-clock.  This mixin stacks all W
+    per-worker shards into leading-axis arrays ONCE per fleet size and
+    exposes
+
+        solve_all(xs, us, z, rho) -> (xs_new (W, d), inner_iters (W,))
+
+    as a single ``jax.vmap``-ed, jitted call (``SchedulerConfig(
+    engine="batched")`` selects it).  Shards of unequal length — W not
+    dividing the sample count — are zero-padded to the longest shard and
+    a per-row {0,1} mask rides along, so every lane has one static shape.
+
+    Host classes provide ``_shard(wid, W)`` (a pytree whose leaves are
+    all row-leading), ``fista``/``fixed_inner``/``dtype``, and implement
+
+        _masked_loss_value_and_grad(shard, mask) -> vg(x) -> (f, grad)
+
+    the masked twin of the loop path's loss: padded rows must contribute
+    EXACTLY zero to both value and gradient (multiplying real rows by a
+    1.0 mask is float-exact, so the two engines agree to vmap-reduction
+    tolerance — allclose, not bitwise).  Per-lane FISTA keeps its own
+    data-dependent iteration count: ``lax.while_loop`` under ``vmap``
+    masks finished lanes, so a lane's trajectory and its reported
+    ``inner_iters`` match the unbatched solve.
+
+    Batches are cached per fleet size W, which is what makes elastic
+    ``rescale()`` compose for free: a new W is a cache miss that
+    re-stacks from the (also cached) per-(wid, W) shards.
+    """
+
+    _batch_cache: Optional[Dict[int, Tuple]] = None
+    _batched_solver_cache: Optional[Dict[Tuple, Callable]] = None
+
+    # -- host hooks ---------------------------------------------------------
+    def _masked_loss_value_and_grad(self, shard, mask) -> Callable:
+        """vg(x) -> (f, grad) with padded rows contributing exactly 0."""
+        raise NotImplementedError
+
+    def supports_batched(self) -> bool:
+        """True when this workload implements the batched path (either
+        the masked-loss hook or a full ``solve_all`` override)."""
+        cls = type(self)
+        return (cls.solve_all is not BatchedShardProblem.solve_all
+                or cls._masked_loss_value_and_grad
+                is not BatchedShardProblem._masked_loss_value_and_grad)
+
+    # -- stacking -----------------------------------------------------------
+    def batch_shards(self, n_workers: int) -> Tuple:
+        """(stacked shard pytree with leading axis W, row mask (W, Nmax)).
+
+        Cached per W; every leaf of ``_shard`` is assumed row-leading
+        (true for all built-ins), zero-padded to the longest shard."""
+        if self._batch_cache is None:
+            self._batch_cache = {}
+        if n_workers not in self._batch_cache:
+            shards = [self._shard(w, n_workers) for w in range(n_workers)]
+            rows = [int(jax.tree_util.tree_leaves(s)[0].shape[0])
+                    for s in shards]
+            nmax = max(rows)
+
+            def pad(leaf, n):
+                a = np.asarray(leaf)
+                if n == nmax:
+                    return a
+                widths = [(0, nmax - n)] + [(0, 0)] * (a.ndim - 1)
+                return np.pad(a, widths)
+
+            padded = [jax.tree_util.tree_map(lambda l, n=n: pad(l, n), s)
+                      for s, n in zip(shards, rows)]
+            stacked = jax.tree_util.tree_map(
+                lambda *leaves: jnp.asarray(np.stack(leaves)), *padded)
+            mask = np.zeros((n_workers, nmax), np.float64)
+            for w, n in enumerate(rows):
+                mask[w, :n] = 1.0
+            self._batch_cache[n_workers] = (
+                stacked, jnp.asarray(mask, self.dtype))
+        return self._batch_cache[n_workers]
+
+    # -- the one-call solver ------------------------------------------------
+    def _batched_solver(self, shape_key: Tuple) -> Callable:
+        if self._batched_solver_cache is None:
+            self._batched_solver_cache = {}
+        if shape_key not in self._batched_solver_cache:
+            fista_opts = self.fista
+            fixed = self.fixed_inner
+
+            @jax.jit
+            def run_all(batch, mask, xs, z, us, rho):
+                def one(shard, m, x0, u):
+                    vg = self._masked_loss_value_and_grad(shard, m)
+                    return solve_augmented(vg, x0, z - u, rho, fixed,
+                                           fista_opts)
+
+                return jax.vmap(one, in_axes=(0, 0, 0, 0))(
+                    batch, mask, xs, us)
+
+            self._batched_solver_cache[shape_key] = run_all
+        return self._batched_solver_cache[shape_key]
+
+    def solve_all(self, xs: jnp.ndarray, us: jnp.ndarray, z: jnp.ndarray,
+                  rho: float) -> Tuple[jnp.ndarray, np.ndarray]:
+        """All W Algorithm-2 bodies in one device call: returns
+        (x_new (W, d), per-worker real inner-iteration counts (W,))."""
+        n_workers = int(xs.shape[0])
+        batch, mask = self.batch_shards(n_workers)
+        shape_key = tuple(l.shape for l in jax.tree_util.tree_leaves(batch))
+        run_all = self._batched_solver(shape_key)
+        xs_new, ks = run_all(batch, mask, xs, z, us,
+                             jnp.asarray(rho, self.dtype))
+        return xs_new, np.asarray(ks)
+
+
 # ---------------------------------------------------------------------------
 # Shared scaffolding for shard-partitioned smooth-loss workloads
 # ---------------------------------------------------------------------------
 
 
-class FistaShardProblem:
+class FistaShardProblem(BatchedShardProblem):
     """Scaffolding shared by the built-in workloads: a deterministic
     per-(wid, W) shard cache and one jitted FISTA solver per shard shape
     over ``f_w + the augmented quadratic`` (rho etc. are traced arguments,
@@ -198,19 +343,8 @@ class FistaShardProblem:
             @jax.jit
             def run(shard, x0, z, u, rho):
                 vg = self._loss_value_and_grad(shard)
-                center = z - u
-
-                def aug(x):
-                    f, g = vg(x)
-                    dx = x - center
-                    return f + 0.5 * rho * jnp.vdot(dx, dx), g + rho * dx
-
-                if fixed is not None:
-                    x_new, info = fista_mod.fista_fixed(aug, x0, fixed,
-                                                        fista_opts)
-                else:
-                    x_new, info = fista_mod.fista(aug, x0, fista_opts)
-                return x_new, info.k
+                return solve_augmented(vg, x0, z - u, rho, fixed,
+                                       fista_opts)
 
             self._solver_cache[shape_key] = run
         return self._solver_cache[shape_key]

@@ -26,10 +26,20 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import prox
 from repro.data.logreg import shard_rows
 from repro.problems import base
+
+
+@jax.jit
+def _lasso_direct_all(evals, evecs, Atb, z, us, rho):
+    """Every worker's closed-form solve from its cached eigendecomposition:
+    x_w = V_w (V_w^T rhs_w) / (lam_w + rho), one device call."""
+    rhs = Atb + rho * (z[None, :] - us)                   # (W, d)
+    proj = jnp.einsum("wdk,wd->wk", evecs, rhs)           # V^T rhs
+    return jnp.einsum("wdk,wk->wd", evecs, proj / (evals + rho))
 
 
 class LassoProblem(base.FistaShardProblem):
@@ -79,6 +89,16 @@ class LassoProblem(base.FistaShardProblem):
             return 0.5 * jnp.vdot(r, r), A.T @ r
         return vg
 
+    def _masked_loss_value_and_grad(self, shard, mask):
+        # zero-padded rows already have r = 0; the mask keeps the
+        # contract explicit (and exact for any padding convention)
+        A, b = shard
+
+        def vg(x):
+            r = mask * (A @ x - b)
+            return 0.5 * jnp.vdot(r, r), A.T @ r
+        return vg
+
     def _factor(self, wid: int, n_workers: int):
         key = (wid, n_workers)
         if key not in self._factor_cache:
@@ -95,6 +115,26 @@ class LassoProblem(base.FistaShardProblem):
         rhs = Atb + rho * (z - u)
         x_new = evecs @ ((evecs.T @ rhs) / (evals + rho))
         return x_new.astype(self.dtype), 1
+
+    # -- batched engine: all W Gram factors stacked, one call per round ----
+    def _batched_factor(self, n_workers: int):
+        key = ("batch", n_workers)
+        if key not in self._factor_cache:
+            (A, b), _ = self.batch_shards(n_workers)   # pad rows are 0
+            evals, evecs = jnp.linalg.eigh(
+                jnp.einsum("wnd,wne->wde", A, A))      # batched eigh
+            Atb = jnp.einsum("wnd,wn->wd", A, b)
+            self._factor_cache[key] = (evals, evecs, Atb)
+        return self._factor_cache[key]
+
+    def solve_all(self, xs, us, z, rho):
+        if not self.direct:
+            return super().solve_all(xs, us, z, rho)
+        n_workers = int(xs.shape[0])
+        evals, evecs, Atb = self._batched_factor(n_workers)
+        x_new = _lasso_direct_all(evals, evecs, Atb, z, us,
+                                  jnp.asarray(rho, self.dtype))
+        return x_new.astype(self.dtype), np.ones(n_workers, np.int64)
 
     def prox_h(self, v, t):
         return prox.prox_l1(v, t, self.lam1)

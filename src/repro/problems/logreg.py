@@ -14,8 +14,16 @@ from repro.core.fista import FistaOptions
 from repro.problems import base
 
 
-class LogRegProblem:
-    """l1-logistic regression on sparse Koh-Kim-Boyd shards (Section III)."""
+class LogRegProblem(base.BatchedShardProblem):
+    """l1-logistic regression on sparse Koh-Kim-Boyd shards (Section III).
+
+    The loop path below is verbatim pre-registry code; the batched path
+    (``solve_all``, via ``base.BatchedShardProblem``) stacks the sparse
+    (idx, vals, b) shards and runs every worker's FISTA in one vmapped
+    call — ``_masked_loss_value_and_grad`` is the masked twin of
+    ``data.logreg.sparse_logistic_value_and_grad`` (zero-padded rows have
+    vals=0 so their gradient scatter is exactly 0; the mask zeroes their
+    log(2) value contribution)."""
 
     def __init__(self, logreg_cfg, *, fista: FistaOptions = FistaOptions(),
                  fixed_inner: Optional[int] = None, dtype=jnp.float32):
@@ -102,6 +110,21 @@ class LogRegProblem:
         x_new, k = run(idx, vals, b, x0, z, u,
                        jnp.asarray(rho, self.dtype))
         return x_new, int(k)
+
+    def _masked_loss_value_and_grad(self, shard, mask):
+        idx, vals, b = shard
+        d = self.cfg.n_features
+
+        def vg(x):
+            ax = jnp.sum(vals * x[idx], axis=-1)              # (N,)
+            margins = -b * ax
+            f = jnp.sum(mask * jnp.logaddexp(jnp.zeros((), x.dtype),
+                                             margins))
+            coef = mask * (-b * jax.nn.sigmoid(margins))      # (N,)
+            contrib = (coef[:, None] * vals).reshape(-1)
+            grad = jnp.zeros((d,), x.dtype).at[idx.reshape(-1)].add(contrib)
+            return f, grad
+        return vg
 
     def prox_h(self, v, t):
         from repro.core import prox

@@ -78,6 +78,26 @@ class SoftmaxProblem(base.FistaShardProblem):
             return f, (A.T @ resid).reshape(-1)
         return vg
 
+    def _masked_loss_value_and_grad(self, shard, mask):
+        # batched-engine twin: a zero-padded row has logits 0, so it
+        # would contribute log(C) to the value and a nonzero resid row —
+        # the mask zeroes both (the A=0 row already kills A.T @ resid,
+        # masking resid keeps the contract exact by construction)
+        A, y = shard
+        d, C = self.d_in, self.n_classes
+
+        def vg(x):
+            X = x.reshape(d, C)
+            logits = A @ X                                   # (N, C)
+            lse = jax.scipy.special.logsumexp(logits, axis=1)
+            picked = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+            f = jnp.sum(mask * (lse - picked))
+            resid = mask[:, None] * (
+                jax.nn.softmax(logits, axis=1)
+                - jax.nn.one_hot(y, C, dtype=x.dtype))       # (N, C)
+            return f, (A.T @ resid).reshape(-1)
+        return vg
+
     def prox_h(self, v, t):
         return prox.prox_l1(v, t, self.lam1)
 

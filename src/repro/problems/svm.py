@@ -70,6 +70,31 @@ class SVMProblem(base.FistaShardProblem):
             return jnp.sum(val), grad
         return vg
 
+    def _masked_loss_value_and_grad(self, shard, mask):
+        # batched-engine twin: padded rows (vals=0, b=0) sit at margin 0
+        # inside the hinge's linear branch — the mask zeroes their value
+        # term; their gradient scatter is already exactly 0 (vals=0)
+        idx, vals, b = shard
+        gamma = self.smoothing
+        d = self.n_features
+
+        def vg(x):
+            m = b * jnp.sum(vals * x[idx], axis=-1)          # margins (N,)
+            one = jnp.asarray(1.0, x.dtype)
+            val = jnp.where(
+                m >= one, 0.0,
+                jnp.where(m <= one - gamma,
+                          one - m - gamma / 2,
+                          (one - m) ** 2 / (2 * gamma)))
+            dldm = jnp.where(
+                m >= one, 0.0,
+                jnp.where(m <= one - gamma, -one, -(one - m) / gamma))
+            coef = mask * dldm * b                           # (N,)
+            contrib = (coef[:, None] * vals).reshape(-1)
+            grad = jnp.zeros((d,), x.dtype).at[idx.reshape(-1)].add(contrib)
+            return jnp.sum(mask * val), grad
+        return vg
+
     def prox_h(self, v, t):
         return prox.prox_l1(v, t, self.lam1)
 

@@ -21,7 +21,16 @@ cold starts, responsiveness) and supports:
                        arrivals; a worker whose z is older than
                        ``staleness_bound`` versions blocks until rebroadcast.
 
-Orthogonal to the barrier mode, the fan-in path is switchable
+Orthogonal to the barrier mode, the worker-solve EXECUTION ENGINE is
+switchable (``engine="loop"`` — one jitted solve per worker per round,
+byte-identical to the historical path — or ``engine="batched"`` — all W
+shards stacked and solved in ONE vmapped XLA call via
+``problems.BatchedShardProblem.solve_all``; the per-worker
+timing/straggler/cost model is then applied to the batched outputs, so
+the simulation is allclose to the loop engine at a fraction of the
+dispatch cost: the path that makes W=1024+ sweeps affordable).
+
+Also orthogonal to the barrier mode, the fan-in path is switchable
 (``fanin="flat"`` — the paper's single router, Fig 5's cliff — or
 ``fanin="tree"`` — hierarchical k-ary aggregation, repro.runtime.reduce)
 and ω-messages can be compressed (``compress="topk"|"qsgd"``,
@@ -70,6 +79,16 @@ from repro.runtime.reduce import TreeConfig, fanin_drain
 class SchedulerConfig:
     n_workers: int = 16
     mode: str = "sync"            # sync | drop_slowest | replicated | async_
+    # execution engine for the round's worker solves:
+    #   "loop"    — one jitted solve per worker per round (the historical
+    #               path, byte-identical to pre-engine code);
+    #   "batched" — stack all W shards and run ONE vmapped, jitted
+    #               solve_all per round (problems.BatchedShardProblem);
+    #               numerically allclose to "loop", not bitwise, and
+    #               ~W/dispatch-cost faster in simulator wall-clock.
+    # async_ paces itself per-arrival (a batching window of 1), so the
+    # engine setting only changes the synchronous-family round path.
+    engine: str = "loop"
     drop_frac: float = 0.1        # drop_slowest: fraction not waited for
     replication: int = 2          # replicated: r
     async_batch: int = 4          # async_: S arrivals per z-update
@@ -157,6 +176,18 @@ class Scheduler:
         if cfg.fanin not in ("flat", "tree"):
             raise ValueError(f"fanin must be 'flat' or 'tree', "
                              f"got {cfg.fanin!r}")
+        if cfg.engine not in ("loop", "batched"):
+            raise ValueError(f"engine must be 'loop' or 'batched', "
+                             f"got {cfg.engine!r}")
+        self._engine_batched = cfg.engine == "batched"
+        if self._engine_batched and not (
+                callable(getattr(problem, "solve_all", None))
+                and getattr(problem, "supports_batched", lambda: True)()):
+            raise ValueError(
+                f"engine='batched' needs the problem to implement the "
+                f"batched contract (solve_all / _masked_loss_value_and_grad"
+                f" — see repro.problems.BatchedShardProblem); "
+                f"{type(problem).__name__} does not")
         # message size: the paper sends (q, ω) — d+1 f32 dense; the codec
         # shrinks it (and lossy-codes the ω the master sees) when
         # compression is on
@@ -243,6 +274,36 @@ class Scheduler:
         self.x = self.x.at[lw].set(x_new)
         self.u = self.u.at[lw].set(u_new)
 
+    def _all_worker_passes(self) -> Tuple[np.ndarray, np.ndarray,
+                                          jnp.ndarray, np.ndarray]:
+        """The batched engine's worker phase: every Algorithm-2 body in
+        ONE device call (``problem.solve_all``), plus vectorized q/ω.
+
+        The respawn checks run first, in wid order, so the pool RNG
+        consumes the exact draw sequence the loop engine does.  Returns
+        (q (WL,), inner_iters (WL,), encoded ω (WL, d), extras (W,));
+        the committed (x, u) batch is stashed on ``self._batched_xu``
+        for the round's commit step."""
+        W = self.cfg.n_workers
+        WL = self.n_logical
+        extras = np.zeros(W)
+        for wid in range(W):
+            extras[wid] = self._maybe_respawn(wid)
+        r = self.x - self.z[None, :]
+        u_new = self.u + r
+        q = np.asarray(jnp.einsum("wd,wd->w", r, r), np.float64)
+        xs_new, iters = self.problem.solve_all(self.x, u_new, self.z,
+                                               self.rho)
+        omegas = xs_new + u_new
+        if self.codec.method != "none":
+            # the codec is stateful per logical slot (delta error
+            # feedback), so compression keeps a per-slot encode loop —
+            # the solve batching still amortizes the W device dispatches
+            omegas = jnp.stack([self.codec.encode(lw, omegas[lw])
+                                for lw in range(WL)])
+        self._batched_xu = (xs_new, u_new)
+        return q, np.asarray(iters, np.int64), omegas, extras
+
     def _master_z_update(self, omega_bar: jnp.ndarray, q_sum: float,
                          n_eff: int, adapt_rho: bool = True):
         z_new = self.problem.prox_h(omega_bar, 1.0 / (n_eff * self.rho))
@@ -277,13 +338,19 @@ class Scheduler:
         self._round_results: Dict[int, Tuple] = {}
         codec_snap = self.codec.snapshot()
 
+        batched = self._engine_batched
         fresh: Dict[int, Tuple[jnp.ndarray, float]] = {}
         extras = np.zeros(W)
-        for wid in range(W):
-            omega, q, it, extra = self._worker_pass(wid)
-            inner[wid] = it
-            extras[wid] = extra
-            fresh[wid] = (omega, q)
+        if batched:
+            q_all, iters_all, omegas, extras = self._all_worker_passes()
+            for wid in range(W):
+                inner[wid] = iters_all[self._logical(wid)]
+        else:
+            for wid in range(W):
+                omega, q, it, extra = self._worker_pass(wid)
+                inner[wid] = it
+                extras[wid] = extra
+                fresh[wid] = (omega, q)
 
         timing_iters = inner.copy()
         if cfg.iter_smoothing:
@@ -323,15 +390,25 @@ class Scheduler:
         # the master does not wait for them.  Undelivered messages must
         # not advance the codec's shared view either (their content rides
         # in a later delta instead of being smuggled in for free).
-        self.codec.rollback_except(
-            codec_snap, {self._logical(wid) for _, wid in waited})
-        for _, wid in waited:
-            om, q = fresh[wid]
-            lw = self._logical(wid)
-            self.omega_table = self.omega_table.at[lw].set(om)
-            self.q_table[lw] = q
-        for lw in self._round_results:
-            self._commit_xu(lw)
+        waited_lws = {self._logical(wid) for _, wid in waited}
+        self.codec.rollback_except(codec_snap, waited_lws)
+        if batched:
+            # vectorized table update + wholesale commit: one scatter for
+            # the waited slots instead of W per-row device ops (the
+            # unwaited slots keep their stale ω, same as the loop path)
+            idx = np.fromiter(sorted(waited_lws), np.int64)
+            jidx = jnp.asarray(idx)
+            self.omega_table = self.omega_table.at[jidx].set(omegas[jidx])
+            self.q_table[idx] = q_all[idx]
+            self.x, self.u = self._batched_xu
+        else:
+            for _, wid in waited:
+                om, q = fresh[wid]
+                lw = self._logical(wid)
+                self.omega_table = self.omega_table.at[lw].set(om)
+                self.q_table[lw] = q
+            for lw in self._round_results:
+                self._commit_xu(lw)
 
         # -- scheduler fan-in timing (Fig 5 cliff vs the tree fix) ----------
         master_done = fanin_drain(waited, cfg.fanin, self.pool, cfg.tree,

@@ -1,0 +1,130 @@
+"""CI tooling: the benchmark harness CLI and the regression gate.
+
+Covers the exit-code contract of ``benchmarks/run.py`` (--list, --only
+with unknown names) and ``benchmarks/check_regression.py`` end to end:
+pass, breach (exit 2 + diff table), missing artifacts, and the
+``--update`` re-pin round-trip.
+"""
+import json
+
+import pytest
+
+from benchmarks import check_regression
+from benchmarks import run as bench_run
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py CLI
+# ---------------------------------------------------------------------------
+
+
+def test_run_list_prints_names_and_exits_zero(capsys):
+    assert bench_run.main(["--list"]) is None        # plain return = exit 0
+    names = capsys.readouterr().out.split()
+    assert "bench_scale" in names
+    assert "fig8_coldstart" in names
+    assert "bench_workloads" in names
+
+
+def test_run_only_unknown_name_exits_two(capsys):
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main(["--only", "no_such_benchmark"])
+    assert ei.value.code == 2                        # argparse usage error
+    assert "no_such_benchmark" in capsys.readouterr().err
+
+
+def test_run_only_mixed_known_unknown_exits_two():
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main(["--only", "bench_scale,nope"])
+    assert ei.value.code == 2
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/check_regression.py
+# ---------------------------------------------------------------------------
+
+
+SPEC = [
+    ("art.json", "sweep.256.efficiency", 0.05),
+    ("art.json", "sweep.256.hit_frac", 0.0),         # rtol=0: exact
+]
+
+
+def _gate(tmp_path, artifact_doc, argv=(), spec=SPEC):
+    exp = tmp_path / "experiments"
+    exp.mkdir(exist_ok=True)
+    (exp / "art.json").write_text(json.dumps(artifact_doc))
+    base = tmp_path / "baselines.json"
+    return check_regression.main(
+        ["--experiments", str(exp), "--baselines", str(base), *argv],
+        spec=spec)
+
+
+DOC = {"sweep": {"256": {"efficiency": 0.71, "hit_frac": 1.0}}}
+
+
+def test_update_then_pass_roundtrip(tmp_path, capsys):
+    assert _gate(tmp_path, DOC, ["--update"]) == 0
+    pinned = json.loads((tmp_path / "baselines.json").read_text())
+    assert pinned["art.json"]["sweep.256.efficiency"] == 0.71
+    assert _gate(tmp_path, DOC) == 0
+    assert "all 2 pinned metrics within tolerance" in capsys.readouterr().out
+
+
+def test_breach_exits_two_with_diff_table(tmp_path, capsys):
+    assert _gate(tmp_path, DOC, ["--update"]) == 0
+    drifted = {"sweep": {"256": {"efficiency": 0.50, "hit_frac": 1.0}}}
+    assert _gate(tmp_path, drifted) == 2
+    out = capsys.readouterr().out
+    assert "BREACH" in out
+    assert "sweep.256.efficiency" in out
+    assert "0.71" in out and "0.5" in out            # baseline and current
+
+
+def test_within_tolerance_passes(tmp_path):
+    assert _gate(tmp_path, DOC, ["--update"]) == 0
+    nudged = {"sweep": {"256": {"efficiency": 0.712, "hit_frac": 1.0}}}
+    assert _gate(tmp_path, nudged) == 0              # 0.3% < 5% rtol
+
+
+def test_exact_metric_rejects_any_drift(tmp_path, capsys):
+    assert _gate(tmp_path, DOC, ["--update"]) == 0
+    nudged = {"sweep": {"256": {"efficiency": 0.71, "hit_frac": 0.999}}}
+    assert _gate(tmp_path, nudged) == 2              # rtol=0 means exact
+
+
+def test_missing_artifact_exits_two(tmp_path, capsys):
+    assert check_regression.main(
+        ["--experiments", str(tmp_path / "nowhere"),
+         "--baselines", str(tmp_path / "baselines.json")], spec=SPEC) == 2
+    assert "missing artifact" in capsys.readouterr().out
+
+
+def test_missing_metric_path_exits_two(tmp_path, capsys):
+    assert _gate(tmp_path, {"sweep": {}}) == 2
+    assert "no metric at" in capsys.readouterr().out
+
+
+def test_missing_baselines_file_exits_two(tmp_path, capsys):
+    assert _gate(tmp_path, DOC) == 2                 # never pinned
+    assert "--update" in capsys.readouterr().out
+
+
+def test_unpinned_metric_fails(tmp_path, capsys):
+    """A metric added to SPEC but absent from the committed baselines must
+    fail the gate (forces a --update commit, not a silent skip)."""
+    assert _gate(tmp_path, DOC, ["--update"]) == 0
+    wider = SPEC + [("art.json", "sweep.256.r_norm", 0.1)]
+    doc = {"sweep": {"256": {"efficiency": 0.71, "hit_frac": 1.0,
+                             "r_norm": 0.2}}}
+    assert _gate(tmp_path, doc, spec=wider) == 2
+    assert "UNPINNED" in capsys.readouterr().out
+
+
+def test_real_spec_paths_are_well_formed():
+    """Every committed SPEC entry names a JSON artifact and a non-empty
+    dotted path with a sane tolerance."""
+    for artifact, path, rtol in check_regression.SPEC:
+        assert artifact.endswith(".json")
+        assert path and not path.startswith(".")
+        assert 0.0 <= rtol <= 0.5
