@@ -1,0 +1,157 @@
+"""Shared warm pool vs per-job isolated pools at 16 concurrent jobs.
+
+The cluster layer's headline claim (the paper's economics, taken
+seriously): when MANY experiments run concurrently, sharing one
+provider-backed keep-alive pool beats giving every job a private pool —
+on total dollars AND p50 job completion latency — because a finished
+job's retired sandboxes warm-start the next tenant's fleet instead of
+expiring unused.  Capacity is held fixed across the comparison (same
+worker cap, same job slots, same FIFO dispatch); only the pool's
+ownership changes, so the delta is pure keep-alive amortization.
+
+Workload: 16 jobs from 4 tenants, mixed across all four registered
+workloads (logreg / lasso / svm / softmax), every job solving a real
+reduced instance through ``repro.api`` specs.
+
+Second table: the job-scheduling POLICY zoo on the shared pool, with a
+per-tenant slowdown fairness table.  Submission order is deliberately
+tenant-blocked (all of alice's jobs, then bob's, ...), the adversarial
+case for FIFO: the last tenant's jobs wait behind every other tenant.
+``fair_share`` (least-served tenant first) must bound the max/min
+tenant slowdown ratio below FIFO's.
+
+Emits experiments/bench_cluster.json; the shared-pool warm-hit rate is
+pinned in benchmarks/baselines/baselines.json via check_regression.py.
+"""
+import numpy as np
+
+from benchmarks.common import emit
+from repro import problems
+from repro.api import ExperimentSpec
+from repro.core.admm import AdmmOptions
+from repro.runtime import (ClusterConfig, PoolConfig, ProviderConfig,
+                           SchedulerConfig)
+from repro.runtime.cluster import Cluster
+
+W = 8                  # per-job fleet
+N_TENANTS = 4
+JOBS_PER_TENANT = 4    # 16 jobs total
+MAX_ROUNDS = 10
+
+# reduced instances of each registered workload; sized so a job's round
+# time is comparable to the ramp (the regime where pool ownership shows)
+WORKLOADS = {
+    "logreg": dict(n_samples=2048, n_features=96, density=0.05, lam1=0.3,
+                   fista=dict(min_iters=1, eps_grad=1e-3)),
+    "lasso": dict(n_samples=2048, n_features=64),
+    "svm": dict(n_samples=2048, n_features=64),
+    "softmax": dict(n_samples=1024, n_features=24, n_classes=4),
+}
+TENANTS = ["alice", "bob", "carol", "dan"]
+
+
+def job_specs():
+    """16 (tenant, spec) pairs, tenant-blocked submission order, every
+    tenant running a mix of workloads, unique pool seed per job."""
+    names = sorted(WORKLOADS)
+    out = []
+    for t_idx, tenant in enumerate(TENANTS):
+        for k in range(JOBS_PER_TENANT):
+            name = names[(t_idx + k) % len(names)]
+            seed = 100 + t_idx * JOBS_PER_TENANT + k
+            out.append((tenant, ExperimentSpec(
+                problem=name, problem_kwargs=WORKLOADS[name],
+                scheduler=SchedulerConfig(
+                    n_workers=W,
+                    admm=AdmmOptions(max_iters=MAX_ROUNDS),
+                    pool=PoolConfig(
+                        seed=seed,
+                        provider=ProviderConfig(enabled=True))),
+                max_rounds=MAX_ROUNDS, label=f"{tenant}/{name}")))
+    return out
+
+
+def build_problems():
+    """One instance per workload, shared across every run of this
+    benchmark so shard generation and jit compilation amortize."""
+    return {name: problems.make(name, **kw)
+            for name, kw in WORKLOADS.items()}
+
+
+def run_cluster(probs, *, policy: str, shared: bool) -> Cluster:
+    cluster = Cluster(ClusterConfig(
+        policy=policy,
+        max_concurrent_jobs=2,          # 2 fleets of 8 at a time
+        max_active_workers=2 * W,
+        share_provider=shared))
+    for tenant, spec in job_specs():
+        cluster.submit(spec, tenant=tenant, problem=probs[spec.problem])
+    return cluster
+
+
+def report_row(label, rep):
+    print(f"  {label:22s} p50={rep.p50_latency_s:6.2f}s "
+          f"p95={rep.p95_latency_s:6.2f}s warm={rep.warm_hit_rate:5.1%} "
+          f"cost=${rep.total_cost_usd:.4f} "
+          f"fairness(max/min slowdown)={rep.fairness_ratio:.2f}")
+
+
+def main():
+    probs = build_problems()
+
+    print(f"[bench_cluster] {N_TENANTS * JOBS_PER_TENANT} jobs "
+          f"({N_TENANTS} tenants x {JOBS_PER_TENANT}), W={W} each, "
+          f"capacity {2 * W} workers / 2 job slots")
+
+    print("[bench_cluster] shared warm pool vs per-job isolated pools "
+          "(both FIFO)")
+    shared = run_cluster(probs, policy="fifo", shared=True).run_all()
+    isolated = run_cluster(probs, policy="fifo", shared=False).run_all()
+    report_row("shared/fifo", shared.report)
+    report_row("isolated/fifo", isolated.report)
+
+    cost_win = shared.report.total_cost_usd < isolated.report.total_cost_usd
+    p50_win = shared.report.p50_latency_s < isolated.report.p50_latency_s
+    print(f"[bench_cluster] shared beats isolated on total cost: "
+          f"${shared.report.total_cost_usd:.4f} vs "
+          f"${isolated.report.total_cost_usd:.4f} "
+          f"{'OK' if cost_win else 'REGRESSION'}")
+    print(f"[bench_cluster] shared beats isolated on p50 latency: "
+          f"{shared.report.p50_latency_s:.2f}s vs "
+          f"{isolated.report.p50_latency_s:.2f}s "
+          f"{'OK' if p50_win else 'REGRESSION'}")
+
+    print("[bench_cluster] policy zoo on the shared pool "
+          "(tenant-blocked submission — FIFO's adversarial case)")
+    policies = {}
+    for policy in ("fifo", "fair_share", "priority", "deadline"):
+        rep = run_cluster(probs, policy=policy, shared=True).run_all().report
+        report_row(policy, rep)
+        policies[policy] = rep
+
+    fair_bound = (policies["fair_share"].fairness_ratio
+                  < policies["fifo"].fairness_ratio)
+    print(f"[bench_cluster] fair_share bounds tenant slowdown spread: "
+          f"{policies['fair_share'].fairness_ratio:.2f} vs fifo "
+          f"{policies['fifo'].fairness_ratio:.2f} "
+          f"{'OK' if fair_bound else 'REGRESSION'}")
+
+    emit("bench_cluster", {
+        "n_jobs": N_TENANTS * JOBS_PER_TENANT,
+        "w_per_job": W,
+        "shared": shared.report.to_dict(),
+        "isolated": isolated.report.to_dict(),
+        "policies": {p: r.to_dict() for p, r in policies.items()},
+        "checks": {
+            "shared_beats_isolated_cost": bool(cost_win),
+            "shared_beats_isolated_p50": bool(p50_win),
+            "fair_share_bounds_slowdown_spread": bool(fair_bound),
+        },
+    })
+    if not (cost_win and p50_win and fair_bound):
+        raise SystemExit("bench_cluster acceptance checks FAILED")
+    return shared, isolated, policies
+
+
+if __name__ == "__main__":
+    main()

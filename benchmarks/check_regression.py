@@ -50,6 +50,11 @@ SPEC = [
     ("fig8_coldstart.json", "256.mean_s", 0.03),
     ("fig8_coldstart.json", "warm_reuse.256.mean_s", 0.05),
     ("fig8_coldstart.json", "warm_reuse.256.warm_hit_frac", 0.0),
+    # cluster layer: of the 16 shared-pool jobs' 128 spawns, everything
+    # after the first two cold fleets lands warm — a count-structural
+    # 112/128, exact by construction (no TTL or capacity pressure at
+    # this scale), so any drift means the leasing/retire path changed
+    ("bench_cluster.json", "shared.warm_hit_rate", 0.0),
 ]
 
 

@@ -23,10 +23,11 @@ def main(argv=None) -> None:
                     help="print the benchmark names and exit")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_admm_vs_sgd, bench_compression, bench_cost,
-                            bench_kernels, bench_scale, bench_workloads,
-                            fig3_convergence, fig4_speedup, fig67_histograms,
-                            fig8_coldstart, roofline)
+    from benchmarks import (bench_admm_vs_sgd, bench_cluster,
+                            bench_compression, bench_cost, bench_kernels,
+                            bench_scale, bench_workloads, fig3_convergence,
+                            fig4_speedup, fig67_histograms, fig8_coldstart,
+                            roofline)
 
     jobs = [
         ("kernels", lambda: bench_kernels.main()),
@@ -36,6 +37,7 @@ def main(argv=None) -> None:
         ("fig67_histograms", lambda: fig67_histograms.main(big=args.paper)),
         ("compression", lambda: bench_compression.main()),
         ("bench_cost", lambda: bench_cost.main()),
+        ("bench_cluster", lambda: bench_cluster.main()),
         ("bench_workloads", lambda: bench_workloads.main()),
         ("bench_scale", lambda: bench_scale.main()),
         ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),

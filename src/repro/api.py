@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro import problems
+from repro.runtime.cluster import Cluster, ClusterConfig, ClusterResult
 from repro.runtime.scheduler import (RoundMetrics, Scheduler,
                                      SchedulerConfig)
 
@@ -142,20 +143,16 @@ def build(spec: ExperimentSpec, *, problem=None):
     return problem, Scheduler(problem, spec.scheduler)
 
 
-def run(spec: ExperimentSpec, *, problem=None,
-        on_round: Optional[Callable[[RoundMetrics], None]] = None
-        ) -> RunResult:
-    """Run a spec end to end.  ``on_round`` fires per round in ALL four
-    barrier modes (async included).  ``problem`` optionally reuses a
-    built instance so sweeps don't regenerate shards or re-jit."""
-    prob, sched = build(spec, problem=problem)
-    t0 = time.time()
-    z = sched.solve(max_rounds=spec.max_rounds, on_round=on_round)
-    wall = time.time() - t0
+def result_from_scheduler(spec: ExperimentSpec, problem, sched: Scheduler,
+                          *, wall_s: float = 0.0) -> RunResult:
+    """Package a driven scheduler's state as a ``RunResult`` — shared by
+    ``run()`` and the multi-tenant cluster (which steps schedulers one
+    round at a time instead of calling ``solve``)."""
     last = sched.history[-1]
     eps = spec.scheduler.admm
     return RunResult(
-        spec=spec, problem=prob, scheduler=sched, z=np.asarray(z),
+        spec=spec, problem=problem, scheduler=sched,
+        z=np.asarray(sched.z),
         trace=[_trace_row(m) for m in sched.history],
         converged=bool(last.r_norm <= eps.eps_primal
                        and last.s_norm <= eps.eps_dual),
@@ -166,4 +163,63 @@ def run(spec: ExperimentSpec, *, problem=None,
         n_respawns=sched.n_respawns,
         w_start=spec.scheduler.n_workers,
         w_final=sched.cfg.n_workers,
-        wall_s=wall)
+        wall_s=wall_s)
+
+
+def run(spec: ExperimentSpec, *, problem=None,
+        on_round: Optional[Callable[[RoundMetrics], None]] = None
+        ) -> RunResult:
+    """Run a spec end to end.  ``on_round`` fires per round in ALL four
+    barrier modes (async included).  ``problem`` optionally reuses a
+    built instance so sweeps don't regenerate shards or re-jit."""
+    prob, sched = build(spec, problem=problem)
+    t0 = time.time()
+    sched.solve(max_rounds=spec.max_rounds, on_round=on_round)
+    return result_from_scheduler(spec, prob, sched,
+                                 wall_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant surface: many specs, one shared warm pool
+# ---------------------------------------------------------------------------
+
+_default_cluster: Optional[Cluster] = None
+
+
+def submit(spec: ExperimentSpec, *, tenant: str = "default",
+           priority: int = 0, deadline_s: Optional[float] = None,
+           at: float = 0.0, problem=None,
+           cluster: Optional[Cluster] = None):
+    """Queue a spec on a cluster (the module-default one unless given)
+    instead of running it solo: many submitted jobs then share ONE warm
+    sandbox pool, interleaved round-by-round by ``run_all()``.
+
+        submit(spec_a, tenant="alice")
+        submit(spec_b, tenant="bob", priority=2)
+        results = run_all()          # ClusterResult: jobs + ClusterReport
+
+    Returns the ``Job`` handle (state ``queued``, or ``rejected`` with a
+    reason — admission control).  See ``repro.runtime.cluster`` for the
+    scheduling policies and the report's contents."""
+    global _default_cluster
+    if cluster is None:
+        if _default_cluster is None:
+            _default_cluster = Cluster()
+        cluster = _default_cluster
+    return cluster.submit(spec, tenant=tenant, priority=priority,
+                          deadline_s=deadline_s, at=at, problem=problem)
+
+
+def run_all(cluster: Optional[Cluster] = None, on_job_done=None):
+    """Drive every job submitted to the cluster (module-default unless
+    given) to completion; returns the ``ClusterResult``.  The default
+    cluster is reset afterwards, so the next ``submit()`` starts a
+    fresh batch."""
+    global _default_cluster
+    if cluster is None:
+        cluster = _default_cluster
+        _default_cluster = None
+        if cluster is None:
+            raise RuntimeError("nothing submitted: call api.submit() "
+                               "first or pass a Cluster")
+    return cluster.run_all(on_job_done=on_job_done)

@@ -1,5 +1,17 @@
-from repro.runtime.autoscale import AutoscaleConfig, Autoscaler
+from repro.runtime.autoscale import (
+    AutoscaleConfig,
+    Autoscaler,
+    ClusterAutoscaleConfig,
+    ClusterAutoscaler,
+)
 from repro.runtime.billing import BillingConfig, BillingMeter, CostBreakdown
+from repro.runtime.cluster import (
+    Cluster,
+    ClusterConfig,
+    ClusterReport,
+    ClusterResult,
+    Job,
+)
 from repro.runtime.pool import LambdaPool, PoolConfig, SimWorker
 from repro.runtime.provider import Provider, ProviderConfig, WarmContainer
 from repro.runtime.reduce import TreeConfig, fanin_drain, tree_drain
@@ -17,4 +29,6 @@ __all__ = [
     "Provider", "ProviderConfig", "WarmContainer",
     "BillingConfig", "BillingMeter", "CostBreakdown",
     "AutoscaleConfig", "Autoscaler",
+    "ClusterAutoscaleConfig", "ClusterAutoscaler",
+    "Cluster", "ClusterConfig", "ClusterReport", "ClusterResult", "Job",
 ]

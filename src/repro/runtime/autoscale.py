@@ -126,3 +126,71 @@ class Autoscaler:
         self._last_change = (current_w, new_w)
         self.decisions.append((self._round, current_w, new_w, reason))
         return new_w
+
+
+# ---------------------------------------------------------------------------
+# Cluster-level elasticity: the worker-capacity controller
+# ---------------------------------------------------------------------------
+
+CLUSTER_POLICIES = ("off", "queue_depth")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterAutoscaleConfig:
+    """Controller for the CLUSTER's aggregate worker capacity.
+
+    Where ``AutoscaleConfig`` resizes one job's fleet mid-run, this
+    policy resizes the cluster's admission capacity — the total number
+    of concurrently-active workers across all tenants (the account-level
+    concurrency the operator reserves).  The signal is aggregate demand:
+    how many admitted jobs are waiting in the queue because the current
+    capacity cannot host their fleets."""
+    policy: str = "off"           # off | queue_depth
+    min_workers: int = 8          # capacity floor
+    max_workers: int = 256        # capacity ceiling
+    factor: int = 2               # grow/shrink multiplier
+    grow_at_depth: int = 2        # queued jobs that trigger growth
+    shrink_at_depth: int = 0      # queue depth at/below which to shrink
+    cooldown_events: int = 4      # min observations between resizes
+
+    def __post_init__(self):
+        if self.policy not in CLUSTER_POLICIES:
+            raise ValueError(f"policy must be one of {CLUSTER_POLICIES}, "
+                             f"got {self.policy!r}")
+        if self.factor < 2:
+            raise ValueError(f"factor must be >= 2, got {self.factor}")
+
+
+class ClusterAutoscaler:
+    """Feed it the queue depth at every cluster event (job step /
+    completion / admission attempt); it answers with a new worker
+    capacity, or None to hold.  Shrinking never cuts below the busiest
+    currently-admitted load (``active_floor``) — capacity is reclaimed
+    from IDLE headroom, never from running jobs."""
+
+    def __init__(self, cfg: ClusterAutoscaleConfig):
+        self.cfg = cfg
+        self._since_change = 0
+        self.decisions = []       # (event_idx, old_cap, new_cap, reason)
+        self._event = 0
+
+    def decide(self, *, cap: int, queue_depth: int,
+               active_workers: int) -> Optional[int]:
+        cfg = self.cfg
+        self._event += 1
+        self._since_change += 1
+        if cfg.policy == "off" or self._since_change < cfg.cooldown_events:
+            return None
+        if queue_depth >= cfg.grow_at_depth:
+            new_cap = min(cap * cfg.factor, cfg.max_workers)
+        elif queue_depth <= cfg.shrink_at_depth:
+            new_cap = max(cap // cfg.factor, cfg.min_workers,
+                          active_workers)
+        else:
+            return None
+        if new_cap == cap:
+            return None
+        self._since_change = 0
+        self.decisions.append((self._event, cap, new_cap,
+                               f"queue_depth={queue_depth}"))
+        return new_cap

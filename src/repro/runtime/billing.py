@@ -73,6 +73,16 @@ class BillingMeter:
     def record_master(self, seconds: float):
         self.master_seconds += seconds
 
+    def absorb(self, other: "BillingMeter"):
+        """Fold another meter's raw accruals into this one (the cluster's
+        per-tenant rollup: one ledger per tenant absorbs every finished
+        job's meter).  Raw quantities add; pricing uses THIS meter's
+        config, so roll up meters that share a BillingConfig."""
+        self.gb_seconds += other.gb_seconds
+        self.requests += other.requests
+        self.egress_bytes += other.egress_bytes
+        self.master_seconds += other.master_seconds
+
     # -- pricing ------------------------------------------------------------
 
     def cost(self) -> CostBreakdown:

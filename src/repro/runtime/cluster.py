@@ -1,0 +1,479 @@
+"""Multi-tenant cluster: many concurrent experiments on ONE warm pool.
+
+The paper's master–worker setup serves exactly one optimization job per
+pool, but its economic pitch — elastic, event-driven runtimes as a
+cost-effective substrate — only pays off when many jobs SHARE the warm
+capacity: keep-alive sandboxes, account concurrency, and billing all
+amortize across tenants (the direction "Exploiting Inherent Elasticity
+of Serverless in Irregular Algorithms" and "Distributed Double Machine
+Learning with a Serverless Architecture" both argue — multi-stage jobs
+with wildly varying parallelism, and fleets of concurrent related
+solves).  ``repro.api.run()`` builds a private pool per experiment;
+this module is the shared-substrate alternative.
+
+``Cluster`` accepts many jobs (an ``ExperimentSpec`` each, plus tenant
+id, priority, optional deadline) and interleaves their scheduler rounds
+**event-driven** over one provider-backed sandbox pool:
+
+* **Admission control** — a job is rejected at submit when its spec
+  cannot ever be placed (fleet larger than the capacity ceiling,
+  ``async_`` mode — which paces itself per-arrival and has no round
+  boundary to interleave at) or when the backlog exceeds
+  ``max_queued``.  Admitted jobs wait in the queue until worker
+  capacity and a job slot free up.
+* **Job scheduling policy** — ``fifo`` (submission order),
+  ``priority`` (higher first), ``deadline`` (earliest first), or
+  ``fair_share`` (least-served tenant first, by accumulated
+  worker-seconds) decides which queued job dispatches when capacity
+  frees.
+* **Event-driven interleaving** — every running job keeps its own sim
+  clock (its ``Scheduler``'s); the cluster always steps the job whose
+  clock trails furthest (``Scheduler.step()``, one round), so pool
+  interactions across jobs happen in (approximately) global time
+  order and a finished job's retired sandboxes are warm for the NEXT
+  admission — whoever the tenant is.
+* **Shared keep-alive** — one tenant-aware ``Provider`` backs every
+  job's ``LambdaPool`` (``share_provider=True``); per-tenant leases and
+  hit/miss stats come with it (``runtime/provider.py``).  With
+  ``share_provider=False`` each job gets the private pool its spec
+  asks for — the isolated baseline ``benchmarks/bench_cluster.py``
+  measures against.
+* **Cluster elasticity** — ``runtime/autoscale.ClusterAutoscaler``
+  resizes the aggregate worker capacity between a floor and a ceiling
+  on the queue-depth signal (demand), modeling the account-level
+  concurrency the operator reserves.
+* **Tenant accounting** — per-job dollars roll up into per-tenant
+  ledgers (``BillingMeter.absorb``), and ``ClusterReport`` summarizes
+  p50/p95 job latency, warm-hit rate, per-tenant dollars/latency/
+  slowdown, and deadline hits.
+
+The surface: ``Cluster.submit(spec, tenant=..., priority=...,
+deadline_s=...)`` → ``Cluster.run_all()`` → per-job ``RunResult``s
+(same type ``repro.api.run`` returns) plus the ``ClusterReport``.
+``repro.api.submit()/run_all()`` wrap a module-default cluster for the
+two-line version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.autoscale import ClusterAutoscaleConfig, ClusterAutoscaler
+from repro.runtime.billing import BillingMeter
+from repro.runtime.pool import LambdaPool
+from repro.runtime.provider import Provider, ProviderConfig
+from repro.runtime.scheduler import Scheduler
+
+POLICIES = ("fifo", "fair_share", "priority", "deadline")
+
+QUEUED, RUNNING, DONE, REJECTED = "queued", "running", "done", "rejected"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    policy: str = "fifo"          # fifo | fair_share | priority | deadline
+    max_concurrent_jobs: int = 4  # job slots
+    max_active_workers: int = 64  # aggregate worker capacity (the account
+    #                               concurrency limit; autoscale ceiling)
+    max_queued: Optional[int] = None   # admission control; None = unbounded
+    share_provider: bool = True   # one warm pool for every job (the point)
+    provider: ProviderConfig = ProviderConfig(enabled=True)
+    autoscale: ClusterAutoscaleConfig = ClusterAutoscaleConfig()
+    cold_base_s: float = 2.2      # greedy-dual's saved-latency calibration
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {self.policy!r}")
+
+
+@dataclasses.dataclass
+class Job:
+    """One submitted experiment and its lifecycle bookkeeping."""
+    job_id: int
+    spec: Any                     # repro.api.ExperimentSpec
+    tenant: str
+    priority: int = 0
+    deadline_s: Optional[float] = None    # latency budget from submit
+    submit_at: float = 0.0
+    state: str = QUEUED
+    reject_reason: Optional[str] = None
+    # filled at dispatch / completion
+    problem: Any = None
+    scheduler: Optional[Scheduler] = None
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    rounds: int = 0
+    max_rounds: int = 0
+    service_ws: float = 0.0       # worker-seconds consumed (fair share)
+    result: Any = None            # repro.api.RunResult
+
+    @property
+    def n_workers(self) -> int:
+        return self.spec.scheduler.n_workers
+
+    @property
+    def worker_demand(self) -> int:
+        """The capacity admission must RESERVE: the starting fleet, or
+        the per-job autoscaler's ceiling when the spec enables one — a
+        job's mid-run rescale() never consults the cluster, so the
+        cluster budgets its worst case up front."""
+        auto = self.spec.scheduler.autoscale
+        if auto.policy != "off":
+            return max(self.spec.scheduler.n_workers, auto.max_workers)
+        return self.spec.scheduler.n_workers
+
+    @property
+    def latency_s(self) -> float:
+        """Submit → finish, in cluster sim time (queue wait included)."""
+        return self.finished_at - self.submit_at
+
+    @property
+    def exec_s(self) -> float:
+        """Dispatch → finish: the job's own execution span."""
+        return self.finished_at - self.started_at
+
+    @property
+    def slowdown(self) -> float:
+        """Latency inflation over the job's own execution span (≥ 1;
+        1.0 = never waited for capacity)."""
+        return self.latency_s / self.exec_s if self.exec_s > 0 else 1.0
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        if self.deadline_s is None:
+            return None
+        return bool(self.latency_s <= self.deadline_s)
+
+    def summary(self) -> dict:
+        out = {
+            "job_id": self.job_id, "tenant": self.tenant,
+            "label": getattr(self.spec, "label", ""),
+            "problem": getattr(self.spec, "problem", ""),
+            "state": self.state, "priority": self.priority,
+            "deadline_s": self.deadline_s, "submit_at": self.submit_at,
+        }
+        if self.state == REJECTED:
+            out["reject_reason"] = self.reject_reason
+            return out
+        out.update({
+            "started_at": float(self.started_at),
+            "finished_at": float(self.finished_at),
+            "latency_s": float(self.latency_s),
+            "exec_s": float(self.exec_s),
+            "slowdown": float(self.slowdown), "rounds": self.rounds,
+            "deadline_met": self.deadline_met,
+            "cost_usd": (self.result.cost_usd if self.result else None),
+            "converged": (self.result.converged if self.result else None),
+        })
+        return out
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """The cluster-level rollup ``run_all`` returns next to the per-job
+    results: latency percentiles, pool economics, tenant fairness."""
+    policy: str
+    n_jobs: int
+    n_rejected: int
+    makespan_s: float             # first admission → last completion
+    p50_latency_s: float
+    p95_latency_s: float
+    warm_hit_rate: float          # launches that landed on a warm sandbox
+    total_cost_usd: float
+    tenant_cost_usd: Dict[str, float]
+    tenant_mean_latency_s: Dict[str, float]
+    tenant_slowdown: Dict[str, float]     # mean latency/exec inflation
+    deadlines_met: int
+    deadlines_missed: int
+    final_worker_cap: int
+    rescales: List
+
+    @property
+    def fairness_ratio(self) -> float:
+        """max/min tenant slowdown — 1.0 is perfectly even service."""
+        vals = [v for v in self.tenant_slowdown.values() if v > 0]
+        return max(vals) / min(vals) if vals else 1.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fairness_ratio"] = self.fairness_ratio
+        return d
+
+
+class Cluster:
+    """Submit many jobs, run them to completion over one shared pool."""
+
+    def __init__(self, cfg: ClusterConfig = ClusterConfig()):
+        self.cfg = cfg
+        self.provider: Optional[Provider] = (
+            Provider(cfg.provider, cold_base_s=cfg.cold_base_s)
+            if (cfg.share_provider and cfg.provider.enabled) else None)
+        self.jobs: List[Job] = []
+        self.worker_cap = (min(cfg.autoscale.min_workers,
+                               cfg.max_active_workers)
+                           if cfg.autoscale.policy != "off"
+                           else cfg.max_active_workers)
+        self.autoscaler = (ClusterAutoscaler(cfg.autoscale)
+                           if cfg.autoscale.policy != "off" else None)
+        self.ledgers: Dict[str, BillingMeter] = {}
+        self._ran = False
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, spec, *, tenant: str = "default", priority: int = 0,
+               deadline_s: Optional[float] = None, at: float = 0.0,
+               problem=None) -> Job:
+        """Admission control + enqueue.  Returns the Job handle (state
+        ``queued`` or ``rejected`` — a structurally unplaceable spec or
+        a full backlog is refused HERE, not discovered mid-run).
+        ``problem`` optionally reuses a built instance (shared shard and
+        solver caches across a sweep, exactly like ``api.run``)."""
+        if self._ran:
+            raise RuntimeError("run_all() already ran — a late submit "
+                               "would be stranded; build a fresh Cluster "
+                               "per batch")
+        job = Job(job_id=len(self.jobs), spec=spec, tenant=tenant,
+                  priority=priority, deadline_s=deadline_s, submit_at=at,
+                  problem=problem)
+        # the hard placement ceiling: even an autoscaled cap is clamped
+        # to max_active_workers at admission, so a fleet beyond it could
+        # never dispatch — refuse it now instead of deadlocking later
+        cap_ceiling = self.cfg.max_active_workers
+        if spec.scheduler.mode == "async_":
+            job.state = REJECTED
+            job.reject_reason = ("async_ jobs pace themselves per-arrival "
+                                 "and cannot be round-interleaved; run "
+                                 "them via repro.api.run")
+        elif job.worker_demand > cap_ceiling:
+            job.state = REJECTED
+            job.reject_reason = (f"needs {job.worker_demand} workers "
+                                 f"(fleet or per-job autoscale ceiling) "
+                                 f"but the cluster caps at {cap_ceiling}")
+        elif (self.cfg.max_queued is not None
+              and sum(j.state == QUEUED for j in self.jobs)
+              >= self.cfg.max_queued):
+            job.state = REJECTED
+            job.reject_reason = (f"backlog full "
+                                 f"(max_queued={self.cfg.max_queued})")
+        self.jobs.append(job)
+        return job
+
+    # -- the job-scheduling policy -------------------------------------------
+
+    def _tenant_service(self) -> Dict[str, float]:
+        svc: Dict[str, float] = {}
+        for j in self.jobs:
+            if j.state in (RUNNING, DONE):
+                svc[j.tenant] = svc.get(j.tenant, 0.0) + j.service_ws
+        return svc
+
+    def _dispatch_order(self, eligible: List[Job]) -> List[Job]:
+        p = self.cfg.policy
+        if p == "fifo":
+            key = lambda j: (j.submit_at, j.job_id)
+        elif p == "priority":
+            key = lambda j: (-j.priority, j.submit_at, j.job_id)
+        elif p == "deadline":
+            key = lambda j: (j.submit_at + (j.deadline_s
+                                            if j.deadline_s is not None
+                                            else float("inf")),
+                             j.submit_at, j.job_id)
+        else:                                           # fair_share
+            svc = self._tenant_service()
+            key = lambda j: (svc.get(j.tenant, 0.0), j.submit_at, j.job_id)
+        return sorted(eligible, key=key)
+
+    # -- dispatch / completion ------------------------------------------------
+
+    def _active_workers(self) -> int:
+        """Live fleet count across running jobs (reporting; tracks
+        mid-run rescales through each scheduler's live cfg)."""
+        return sum(j.scheduler.cfg.n_workers for j in self.jobs
+                   if j.state == RUNNING)
+
+    def _reserved_workers(self) -> int:
+        """Capacity admission has committed: worst-case demand of every
+        running job (>= the live count, so the cap holds even while a
+        per-job autoscaler resizes fleets without asking the cluster)."""
+        return sum(j.worker_demand for j in self.jobs
+                   if j.state == RUNNING)
+
+    def _dispatch(self, job: Job, at: float):
+        """Build the job's scheduler on a pool backed by the shared
+        provider and start its clock at the admission instant."""
+        from repro import problems                      # lazy: no cycle
+        if job.problem is None:
+            job.problem = problems.make(job.spec.problem,
+                                        **dict(job.spec.problem_kwargs))
+        pool = LambdaPool(job.spec.scheduler.pool,
+                          provider=self.provider, tenant=job.tenant)
+        job.scheduler = Scheduler(job.problem, job.spec.scheduler,
+                                  pool=pool, start_time=at)
+        job.started_at = at
+        job.max_rounds = (job.spec.max_rounds
+                          or job.spec.scheduler.admm.max_iters)
+        job.state = RUNNING
+
+    def _admit(self, now: float):
+        """Fill free capacity from the queue, in policy order."""
+        eligible = [j for j in self.jobs
+                    if j.state == QUEUED and j.submit_at <= now]
+        for job in self._dispatch_order(eligible):
+            running = sum(j.state == RUNNING for j in self.jobs)
+            if running >= self.cfg.max_concurrent_jobs:
+                return
+            if self._reserved_workers() + job.worker_demand > min(
+                    self.worker_cap, self.cfg.max_active_workers):
+                # capacity follows demand: an autoscaled cluster sitting
+                # EMPTY below a placeable job's demand grows to meet it
+                # (the queue-depth policy only shapes the cap under
+                # load; it must never starve the head of the queue)
+                if (running == 0 and self.autoscaler is not None
+                        and job.worker_demand
+                        <= self.cfg.max_active_workers):
+                    old_cap = self.worker_cap
+                    self.worker_cap = max(old_cap, job.worker_demand)
+                    self.autoscaler.decisions.append(
+                        (-1, old_cap, self.worker_cap, "demand_grow"))
+                else:
+                    continue            # try a smaller job further down
+            self._dispatch(job, max(now, job.submit_at))
+
+    def _finish(self, job: Job):
+        """Retire the fleet (sandboxes → shared warm pool), build the
+        RunResult, roll the meter into the tenant's ledger."""
+        from repro.api import result_from_scheduler     # lazy: no cycle
+        sched = job.scheduler
+        job.finished_at = sched.sim_time
+        job.state = DONE
+        sched.pool.retire(list(sched.pool.workers), at=sched.sim_time)
+        job.result = result_from_scheduler(
+            job.spec, job.problem, sched, wall_s=0.0)
+        ledger = self.ledgers.get(job.tenant)
+        if ledger is None:
+            ledger = self.ledgers[job.tenant] = BillingMeter(
+                sched.meter.cfg)
+        ledger.absorb(sched.meter)
+
+    def _observe_autoscale(self, queue_depth: int):
+        if self.autoscaler is None:
+            return
+        new_cap = self.autoscaler.decide(
+            cap=self.worker_cap, queue_depth=queue_depth,
+            active_workers=self._active_workers())
+        if new_cap is not None:
+            self.worker_cap = min(new_cap, self.cfg.max_active_workers)
+
+    # -- the event loop -------------------------------------------------------
+
+    def run_all(self, on_job_done=None) -> "ClusterResult":
+        """Drive every submitted job to completion, event-driven: always
+        step the running job whose sim clock trails furthest, admit from
+        the queue whenever capacity frees.  Returns a ``ClusterResult``
+        (per-job ``RunResult``s + the ``ClusterReport``)."""
+        if self._ran:
+            raise RuntimeError("run_all() already ran; build a fresh "
+                               "Cluster per batch")
+        self._ran = True
+        clock = 0.0
+        while True:
+            queued = [j for j in self.jobs if j.state == QUEUED]
+            running = [j for j in self.jobs if j.state == RUNNING]
+            if not queued and not running:
+                break
+            self._admit(clock)
+            running = [j for j in self.jobs if j.state == RUNNING]
+            if not running:
+                # nothing placeable now: jump to the next arrival
+                future = [j.submit_at for j in queued
+                          if j.submit_at > clock]
+                if not future:
+                    raise RuntimeError(
+                        "deadlock: queued jobs but none placeable — "
+                        "check max_active_workers vs job fleet sizes")
+                clock = min(future)
+                continue
+            job = min(running, key=lambda j: (j.scheduler.sim_time,
+                                              j.job_id))
+            m, done = job.scheduler.step()
+            job.rounds += 1
+            job.service_ws = (job.service_ws
+                              + m.round_wall_s * m.n_workers)
+            clock = max(clock, job.scheduler.sim_time)
+            if done or job.rounds >= job.max_rounds:
+                self._finish(job)
+                if on_job_done:
+                    on_job_done(job)
+                # completion frees capacity AT the job's finish instant
+                self._admit(job.finished_at)
+            # demand = jobs that have actually ARRIVED and are waiting
+            # (future submit_at entries are not backlog yet)
+            self._observe_autoscale(
+                sum(j.state == QUEUED and j.submit_at <= clock
+                    for j in self.jobs))
+        return ClusterResult(jobs=list(self.jobs), report=self._report())
+
+    # -- reporting ------------------------------------------------------------
+
+    def _warm_hit_rate(self) -> float:
+        if self.provider is not None:
+            return self.provider.warm_hit_rate()
+        provs = {id(j.scheduler.pool.provider): j.scheduler.pool.provider
+                 for j in self.jobs
+                 if j.scheduler is not None
+                 and j.scheduler.pool.provider is not None}
+        hits = sum(p.stats.warm_hits for p in provs.values())
+        total = hits + sum(p.stats.cold_misses for p in provs.values())
+        return hits / total if total else 0.0
+
+    def _report(self) -> ClusterReport:
+        done = [j for j in self.jobs if j.state == DONE]
+        lats = np.array([j.latency_s for j in done]) if done else np.zeros(1)
+        tenants = sorted({j.tenant for j in done})
+        t_cost = {t: float(self.ledgers[t].total_usd()) for t in tenants
+                  if t in self.ledgers}
+        t_lat = {t: float(np.mean([j.latency_s for j in done
+                                   if j.tenant == t])) for t in tenants}
+        t_slow = {t: float(np.mean([j.slowdown for j in done
+                                    if j.tenant == t])) for t in tenants}
+        met = sum(1 for j in done if j.deadline_met is True)
+        missed = sum(1 for j in done if j.deadline_met is False)
+        return ClusterReport(
+            policy=self.cfg.policy,
+            n_jobs=len(self.jobs),
+            n_rejected=sum(j.state == REJECTED for j in self.jobs),
+            makespan_s=float(max(j.finished_at for j in done)
+                             - min(j.started_at for j in done))
+            if done else 0.0,
+            p50_latency_s=float(np.percentile(lats, 50)),
+            p95_latency_s=float(np.percentile(lats, 95)),
+            warm_hit_rate=self._warm_hit_rate(),
+            total_cost_usd=float(sum(j.result.cost_usd for j in done)),
+            tenant_cost_usd=t_cost,
+            tenant_mean_latency_s=t_lat,
+            tenant_slowdown=t_slow,
+            deadlines_met=met,
+            deadlines_missed=missed,
+            final_worker_cap=self.worker_cap,
+            rescales=(list(self.autoscaler.decisions)
+                      if self.autoscaler else []),
+        )
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """What ``run_all`` hands back: the jobs (each with its
+    ``RunResult`` at ``.result``) and the cluster rollup."""
+    jobs: List[Job]
+    report: ClusterReport
+
+    def job_results(self) -> List:
+        """The per-job RunResults, completed jobs only, submit order."""
+        return [j.result for j in self.jobs if j.state == DONE]
+
+    def to_dict(self) -> dict:
+        return {"report": self.report.to_dict(),
+                "jobs": [j.summary() for j in self.jobs]}

@@ -91,15 +91,29 @@ class SimWorker:
 
 
 class LambdaPool:
-    """Spawns/replaces simulated serverless workers; owns the RNG."""
+    """Spawns/replaces simulated serverless workers; owns the RNG.
 
-    def __init__(self, cfg: PoolConfig):
+    ``provider`` injects a pre-built (possibly SHARED) keep-alive
+    provider instead of the config-owned one — the multi-tenant cluster
+    (``runtime/cluster.py``) backs many pools with one warm pool this
+    way; ``tenant`` tags every sandbox lease and per-tenant stat this
+    pool generates.  Both default to the historical single-pool
+    behavior."""
+
+    def __init__(self, cfg: PoolConfig, *,
+                 provider: Optional[Provider] = None,
+                 tenant: Optional[str] = None):
         self.cfg = cfg
         self.rng = np.random.RandomState(cfg.seed)
         self.workers: Dict[int, SimWorker] = {}
         self.total_spawns = 0
-        self.provider = (Provider(cfg.provider, cold_base_s=cfg.cold_base_s)
-                         if cfg.provider.enabled else None)
+        self.tenant = tenant
+        if provider is not None:
+            self.provider: Optional[Provider] = provider
+        else:
+            self.provider = (Provider(cfg.provider,
+                                      cold_base_s=cfg.cold_base_s)
+                             if cfg.provider.enabled else None)
         # (start latency, was_warm) per spawn — benchmarks/bench_cost reads
         # this for the mean-start-latency axis; pure bookkeeping, no RNG
         self.spawn_log: List[Tuple[float, bool]] = []
@@ -122,7 +136,8 @@ class LambdaPool:
         if self.provider is not None and w.env_cid >= 0:
             self.provider.release(cid=w.env_cid,
                                   created_at=w.env_created_at,
-                                  uses=w.env_uses, speed=w.speed, at=at)
+                                  uses=w.env_uses, speed=w.speed, at=at,
+                                  tenant=self.tenant)
 
     def spawn_bulk(self, wids: List[int], at: float) -> List[SimWorker]:
         """Spawn workers for the given slots; POST requests queue in one
@@ -142,7 +157,8 @@ class LambdaPool:
         out = []
         cold_pos = 0
         for wid in wids:
-            warm = prov.acquire(at) if prov is not None else None
+            warm = (prov.acquire(at, tenant=self.tenant)
+                    if prov is not None else None)
             if warm is not None:
                 start = prov.warm_start_s()
                 speed = warm.speed
@@ -153,7 +169,7 @@ class LambdaPool:
                 speed = self._speed()
                 if prov is not None:
                     start += prov.throttle_wait(at)
-                    cid, env_at, uses = prov.new_cid(), at, 1
+                    cid, env_at, uses = prov.new_cid(self.tenant), at, 1
                 else:
                     cid, env_at, uses = -1, at, 1
             gen = (self.workers[wid].generation + 1
@@ -180,9 +196,12 @@ class LambdaPool:
     def crash(self, wid: int):
         """Mark a worker's sandbox as destroyed (failure injection): the
         provider tears down crashed environments, so the next spawn for
-        this slot cannot land warm on it."""
+        this slot cannot land warm on it — and its lease ends without
+        the sandbox ever reaching the idle pool."""
         w = self.workers.get(wid)
         if w is not None:
+            if self.provider is not None and w.env_cid >= 0:
+                self.provider.forfeit(w.env_cid)
             w.env_cid = -1
 
     def mean_start_latency(self) -> float:

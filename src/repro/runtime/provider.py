@@ -32,6 +32,17 @@ draw sequence, same constants — which is the regression anchor
 (tests/test_provider.py).  The provider draws its jitter from its OWN
 RNG so that enabling it with an empty warm pool also reproduces the
 cold numbers exactly.
+
+**Multi-tenancy** (``runtime/cluster.py``): one Provider instance can
+back MANY pools at once — each pool tags its spawns with a tenant id,
+and the provider keeps a *lease* per in-use sandbox (cid → tenant) plus
+per-tenant hit/miss/eviction stats.  Leased sandboxes are, by
+construction, never in the idle pool, so no eviction policy can reclaim
+a container out from under a running invocation — the invariant the
+property suite (tests/test_properties.py) hammers on.  A sandbox
+released by one tenant's finished job is immediately acquirable by any
+other tenant: warm capacity amortizes across the cluster, which is the
+whole economic point of sharing the pool.
 """
 from __future__ import annotations
 
@@ -105,17 +116,45 @@ class Provider:
         self.rng = np.random.RandomState(cfg.seed)
         self.idle: List[WarmContainer] = []
         self.stats = ProviderStats()
+        # multi-tenant accounting: cid → tenant for every sandbox
+        # currently hosting an invocation (leased sandboxes are never in
+        # the idle pool, so they are structurally un-evictable), plus a
+        # per-tenant stats ledger.  Tenant None (single-experiment path)
+        # is tracked under the lease map too, but gets no ledger entry.
+        self.leased: Dict[int, Optional[str]] = {}
+        self.tenant_stats: Dict[str, ProviderStats] = {}
         self._next_cid = 0
         self._gd_clock = 0.0           # greedy-dual inflation clock
         # token bucket for cold provisions
         self._tokens = float(cfg.burst_concurrency)
         self._tokens_at = 0.0
 
-    # -- sandbox identity ---------------------------------------------------
+    # -- sandbox identity / leasing -----------------------------------------
 
-    def new_cid(self) -> int:
+    def _tstats(self, tenant: Optional[str]) -> Optional[ProviderStats]:
+        if tenant is None:
+            return None
+        if tenant not in self.tenant_stats:
+            self.tenant_stats[tenant] = ProviderStats()
+        return self.tenant_stats[tenant]
+
+    def new_cid(self, tenant: Optional[str] = None) -> int:
+        """Mint a sandbox id for a cold provision and lease it."""
         self._next_cid += 1
-        return self._next_cid - 1
+        cid = self._next_cid - 1
+        self.leased[cid] = tenant
+        return cid
+
+    def forfeit(self, cid: int) -> None:
+        """A leased sandbox was destroyed (invocation crash): the
+        provider tears the container down, so the lease ends without the
+        sandbox ever returning to the idle pool."""
+        self.leased.pop(cid, None)
+
+    def warm_hit_rate(self) -> float:
+        """Fraction of launches that landed on a keep-alive sandbox."""
+        total = self.stats.warm_hits + self.stats.cold_misses
+        return self.stats.warm_hits / total if total else 0.0
 
     # -- keep-alive pool ----------------------------------------------------
 
@@ -151,12 +190,19 @@ class Provider:
         return sorted(self.idle, key=lambda w: w.priority)
 
     def release(self, *, cid: int, created_at: float, uses: int,
-                speed: float, at: float) -> bool:
+                speed: float, at: float,
+                tenant: Optional[str] = None) -> bool:
         """An invocation ended: return its sandbox to the idle pool.
         Returns False if the sandbox was recycled instead (too old, or
-        evicted immediately by capacity pressure on itself)."""
+        evicted immediately by capacity pressure on itself).  The lease
+        ends either way — once idle, the sandbox is acquirable by ANY
+        tenant."""
         c = self.cfg
+        self.leased.pop(cid, None)
         self.stats.releases += 1
+        ts = self._tstats(tenant)
+        if ts is not None:
+            ts.releases += 1
         if at - created_at > c.max_env_age_s:
             self.stats.expirations += 1
             return False
@@ -177,18 +223,26 @@ class Provider:
         self.idle.append(w)
         return True
 
-    def acquire(self, at: float) -> Optional[WarmContainer]:
+    def acquire(self, at: float,
+                tenant: Optional[str] = None) -> Optional[WarmContainer]:
         """Pop a warm sandbox for a launch at ``at`` (most recently
         released first — the LIFO discipline real providers use, which
         also maximizes the TTL headroom of the rest of the pool).
-        Returns None on a cold miss."""
+        Returns None on a cold miss.  A hit leases the sandbox to
+        ``tenant`` until release/forfeit."""
         self._reap(at)
+        ts = self._tstats(tenant)
         if not self.idle:
             self.stats.cold_misses += 1
+            if ts is not None:
+                ts.cold_misses += 1
             return None
         w = max(self.idle, key=lambda c: c.released_at)
         self.idle.remove(w)
+        self.leased[w.cid] = tenant
         self.stats.warm_hits += 1
+        if ts is not None:
+            ts.warm_hits += 1
         w.uses += 1
         w.last_used = at
         w.priority = self._priority(w)
@@ -209,6 +263,12 @@ class Provider:
         ``refill_per_s``; a request finding the bucket empty waits for
         the next token."""
         c = self.cfg
+        # NOTE a request timestamped BEHIND _tokens_at (same-instant bulk
+        # spawns, or a cluster job whose event clock trails the shared
+        # pool's frontier) accrues negative refill — token debt — so the
+        # i-th such request waits i slots.  That is the intended queue
+        # semantics, and it degrades conservatively (never under-waits)
+        # under the cluster's approximately-interleaved per-job clocks.
         self._tokens = min(
             float(c.burst_concurrency),
             self._tokens + (at - self._tokens_at) * c.refill_per_s)

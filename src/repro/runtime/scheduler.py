@@ -146,10 +146,19 @@ class RoundMetrics(NamedTuple):
 
 
 class Scheduler:
-    def __init__(self, problem: WorkerProblem, cfg: SchedulerConfig):
+    """``pool`` injects a pre-built LambdaPool (the multi-tenant cluster
+    hands every job a pool backed by ONE shared provider); ``start_time``
+    starts this run's event clock at a later instant (the cluster admits
+    jobs mid-timeline).  Defaults reproduce the historical single-
+    experiment path byte-for-byte."""
+
+    def __init__(self, problem: WorkerProblem, cfg: SchedulerConfig, *,
+                 pool: Optional[LambdaPool] = None,
+                 start_time: float = 0.0):
         self.problem = problem
         self.cfg = cfg
-        self.pool = LambdaPool(cfg.pool)
+        self.pool = pool if pool is not None else LambdaPool(cfg.pool)
+        self.start_time = start_time
         W, d = cfg.n_workers, problem.n_features
         dt = getattr(problem, "dtype", jnp.float32)
         # replicated mode: W physical slots host W/r LOGICAL workers; the r
@@ -200,16 +209,16 @@ class Scheduler:
         self.meter = BillingMeter(cfg.billing)
         self._billed_spawns = 0
         self.autoscaler: Optional[Autoscaler] = None
-        self.pool.spawn_bulk(list(range(W)), at=0.0)
+        self.pool.spawn_bulk(list(range(W)), at=start_time)
         self.sim_time = max(w.ready_at for w in self.pool.workers.values())
         self.cold_starts = {w.wid: w.cold_start_s
                             for w in self.pool.workers.values()}
         self._bill_spawns()
         # the early workers idle (billed) until the whole fleet is up,
-        # and the coordinator runs from t=0
+        # and the coordinator runs from the job's admission instant
         for w in self.pool.workers.values():
             self.meter.record_duration(self.sim_time - w.ready_at)
-        self.meter.record_master(self.sim_time)
+        self.meter.record_master(self.sim_time - start_time)
 
     # -- billing --------------------------------------------------------
     def _bill_spawns(self):
@@ -554,6 +563,39 @@ class Scheduler:
         return self.history
 
     # ------------------------------------------------------------------
+    def step(self, on_round: Optional[Callable] = None
+             ) -> Tuple[RoundMetrics, bool]:
+        """Drive ONE synchronous-family round and everything that hangs
+        off it — the callback, the convergence check, the autoscaler —
+        then hand control back.  Returns (metrics, done).
+
+        This is the reentrancy point the multi-tenant cluster
+        (``runtime/cluster.py``) needs: many schedulers interleave by
+        each being stepped one round at a time in event order, with no
+        state crossing between calls.  ``solve()`` is exactly a loop
+        over ``step()``, so the single-experiment path is unchanged."""
+        cfg = self.cfg
+        if cfg.mode == "async_":
+            raise ValueError("step() drives the synchronous-family modes; "
+                             "async_ paces itself per-arrival (run_async)")
+        if cfg.autoscale.policy != "off" and self.autoscaler is None:
+            self.autoscaler = Autoscaler(cfg.autoscale, quantum=self.repl)
+        m = self.run_round()
+        if on_round:
+            on_round(m)
+        if (m.r_norm <= cfg.admm.eps_primal
+                and m.s_norm <= cfg.admm.eps_dual):
+            return m, True
+        if self.autoscaler is not None:
+            self.autoscaler.observe(
+                round_wall_s=m.round_wall_s,
+                t_comp_mean=float(m.t_comp.mean()),
+                t_fanin_wait=m.t_fanin_wait)
+            new_w = self.autoscaler.decide(self.cfg.n_workers)
+            if new_w is not None:
+                self.rescale(new_w)
+        return m, False
+
     def solve(self, *, max_rounds: Optional[int] = None,
               on_round: Optional[Callable] = None) -> jnp.ndarray:
         cfg = self.cfg
@@ -561,23 +603,10 @@ class Scheduler:
         if cfg.mode == "async_":
             self.run_async(K, on_round=on_round)
             return self.z
-        if cfg.autoscale.policy != "off" and self.autoscaler is None:
-            self.autoscaler = Autoscaler(cfg.autoscale, quantum=self.repl)
         for _ in range(K):
-            m = self.run_round()
-            if on_round:
-                on_round(m)
-            if (m.r_norm <= cfg.admm.eps_primal
-                    and m.s_norm <= cfg.admm.eps_dual):
+            _, done = self.step(on_round)
+            if done:
                 break
-            if self.autoscaler is not None:
-                self.autoscaler.observe(
-                    round_wall_s=m.round_wall_s,
-                    t_comp_mean=float(m.t_comp.mean()),
-                    t_fanin_wait=m.t_fanin_wait)
-                new_w = self.autoscaler.decide(self.cfg.n_workers)
-                if new_w is not None:
-                    self.rescale(new_w)
         return self.z
 
     # -- elastic rescale ----------------------------------------------------

@@ -1,0 +1,28 @@
+"""The ONE import point for property-based testing machinery.
+
+Real ``hypothesis`` is a dev dependency (requirements.txt) and is what
+CI runs — ``REQUIRE_HYPOTHESIS=1`` (set in ci.yml) turns the fallback
+into a hard error so the stub can never silently water down CI.  The
+deterministic stub (``tests/_hypothesis_stub.py``) remains ONLY as an
+offline fallback for hermetic containers where nothing may be
+pip-installed; there a property test degrades to a seeded fuzz test.
+
+Test modules use::
+
+    from _hyp import HAS_HYPOTHESIS, given, settings, st
+"""
+import os
+
+try:
+    from hypothesis import assume, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise ModuleNotFoundError(
+            "REQUIRE_HYPOTHESIS is set but the real `hypothesis` package "
+            "is not importable — install requirements.txt; the stub is an "
+            "offline fallback only and must not run in CI")
+    from _hypothesis_stub import assume, given, settings  # noqa: F401
+    from _hypothesis_stub import strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = False

@@ -3,12 +3,13 @@ installed (the CI image may not ship it; nothing may be pip-installed at
 test time).
 
 Implements just the surface this suite uses — ``given``, ``settings``,
-``strategies.integers/floats/lists/tuples/just`` plus ``.map`` /
-``.flatmap`` — by drawing ``max_examples`` samples from a seeded RNG and
-running the test once per sample.  Not shrinking, not adversarial: a
-property-based test degrades to a seeded fuzz test.  With real
-hypothesis on the path the tests import it instead (see the try/except
-at each test module's top).
+``assume``, ``strategies.integers/floats/booleans/sampled_from/lists/
+tuples/just`` plus ``.map`` / ``.flatmap`` — by drawing
+``max_examples`` samples from a seeded RNG and running the test once
+per sample.  Not shrinking, not adversarial: a property-based test
+degrades to a seeded fuzz test.  Tests import through ``tests/_hyp.py``,
+which prefers the REAL hypothesis (a dev dependency; mandatory in CI
+via ``REQUIRE_HYPOTHESIS=1``) and falls back here only offline.
 """
 from __future__ import annotations
 
@@ -16,6 +17,16 @@ import functools
 import inspect
 
 import numpy as np
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)``: skip this drawn example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
 
 
 class _Strategy:
@@ -58,19 +69,48 @@ class strategies:
     def just(value):
         return _Strategy(lambda rng: value)
 
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randint(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.randint(0, len(elements)))])
+
 
 def given(*strats):
-    """Like hypothesis.given: fills the LAST len(strats) positional params
-    of the test; leading params stay visible to pytest as fixtures."""
+    """Like hypothesis.given: fills the LAST len(strats) params of the
+    test (bound by NAME, so pytest fixtures/parametrize args passed as
+    keywords compose); leading params stay visible to pytest."""
     def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        filled = [p.name for p in params[len(params) - len(strats):]]
+
         @functools.wraps(fn)
         def run(*args, **kw):
             n = getattr(run, "_max_examples", 10)
             rng = np.random.RandomState(0)
+            satisfied = 0
             for _ in range(n):
-                fn(*args, *(s.draw(rng) for s in strats), **kw)
-        sig = inspect.signature(fn)
-        params = list(sig.parameters.values())
+                # redraw on assume() rejection (bounded), and refuse to
+                # pass vacuously if NO drawn example ever satisfied it —
+                # real hypothesis raises Unsatisfied in that case
+                for _attempt in range(50):
+                    drawn = {name: s.draw(rng)
+                             for name, s in zip(filled, strats)}
+                    try:
+                        fn(*args, **drawn, **kw)
+                        satisfied += 1
+                        break
+                    except _Unsatisfied:
+                        continue
+            if n and not satisfied:
+                raise AssertionError(
+                    f"{fn.__name__}: assume() rejected every drawn "
+                    f"example — the property was never exercised")
         run.__signature__ = sig.replace(
             parameters=params[:len(params) - len(strats)])
         return run

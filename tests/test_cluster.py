@@ -1,0 +1,353 @@
+"""Multi-tenant cluster layer (runtime/cluster.py).
+
+The load-bearing tests: (1) SINGLE-EXPERIMENT EQUIVALENCE — a cluster
+of one job with no shared provider reproduces the ``api.run`` trace
+byte-for-byte (the cluster is plumbing, not math); (2) cross-tenant
+warm reuse — a finished job's retired fleet warm-starts the next
+tenant's; (3) the four dispatch policies order the queue as specified;
+(4) admission control rejects unplaceable specs at submit time.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (ExperimentSpec, run, run_all, submit)
+from repro.core.admm import AdmmOptions
+from repro.runtime import (Cluster, ClusterAutoscaleConfig, ClusterConfig,
+                           PoolConfig, ProviderConfig, Scheduler,
+                           SchedulerConfig)
+from repro import problems
+
+KW = dict(n_samples=256, n_features=32)
+
+
+def _spec(seed, *, w=4, rounds=5, mode="sync", provider=None, label=""):
+    return ExperimentSpec(
+        problem="lasso", problem_kwargs=KW,
+        scheduler=SchedulerConfig(
+            n_workers=w, mode=mode, replication=2,
+            admm=AdmmOptions(max_iters=rounds),
+            pool=PoolConfig(seed=seed,
+                            provider=provider or ProviderConfig())),
+        max_rounds=rounds, label=label or f"job{seed}")
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    return problems.make("lasso", **KW)
+
+
+# ---------------------------------------------------------------------------
+# equivalence + reentrancy
+# ---------------------------------------------------------------------------
+
+
+def test_single_job_cluster_matches_api_run(lasso):
+    """One job, no shared provider, ample capacity: the cluster-driven
+    trace is byte-identical to the solo api.run path."""
+    solo = run(_spec(7), problem=lasso)
+    c = Cluster(ClusterConfig(share_provider=False))
+    job = c.submit(_spec(7), problem=lasso)
+    res = c.run_all()
+    assert job.state == "done"
+    got = [(t["r_norm"], t["s_norm"], t["cost_usd"])
+           for t in job.result.trace]
+    want = [(t["r_norm"], t["s_norm"], t["cost_usd"]) for t in solo.trace]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(job.result.z, solo.z)
+    assert res.report.total_cost_usd == pytest.approx(solo.cost_usd)
+
+
+def test_step_interleaving_is_isolated(lasso):
+    """Scheduler.step() reentrancy: two schedulers stepped alternately
+    produce exactly their solo traces (no cross-contamination — the
+    property the cluster's event loop rests on)."""
+    solo = {}
+    for seed in (1, 2):
+        s = Scheduler(lasso, _spec(seed).scheduler)
+        s.solve(max_rounds=5)
+        solo[seed] = [(m.r_norm, m.s_norm, m.sim_time) for m in s.history]
+    a = Scheduler(lasso, _spec(1).scheduler)
+    b = Scheduler(lasso, _spec(2).scheduler)
+    for _ in range(5):
+        a.step()
+        b.step()
+    for sched, seed in ((a, 1), (b, 2)):
+        got = [(m.r_norm, m.s_norm, m.sim_time) for m in sched.history]
+        assert got == solo[seed]
+
+
+def test_step_rejects_async(lasso):
+    s = Scheduler(lasso, _spec(0, mode="async_").scheduler)
+    with pytest.raises(ValueError, match="async"):
+        s.step()
+
+
+def test_start_time_offsets_the_clock(lasso):
+    """A scheduler admitted mid-timeline runs entirely after its start
+    instant, with the same per-round walls as the t=0 run."""
+    base = Scheduler(lasso, _spec(3).scheduler)
+    late = Scheduler(lasso, _spec(3).scheduler, start_time=100.0)
+    base.solve(max_rounds=3)
+    late.solve(max_rounds=3)
+    for mb, ml in zip(base.history, late.history):
+        assert ml.sim_time == pytest.approx(mb.sim_time + 100.0)
+        assert ml.round_wall_s == pytest.approx(mb.round_wall_s)
+        assert ml.r_norm == mb.r_norm
+    # billing identical: the offset bills the same spans
+    assert late.meter.total_usd() == pytest.approx(base.meter.total_usd())
+
+
+# ---------------------------------------------------------------------------
+# shared warm pool
+# ---------------------------------------------------------------------------
+
+
+def test_cross_tenant_warm_reuse(lasso):
+    """Sequential jobs on the shared pool: job 1's retired fleet serves
+    job 2's spawns warm, across tenants, and the per-tenant provider
+    ledgers see it."""
+    c = Cluster(ClusterConfig(max_concurrent_jobs=1))
+    c.submit(_spec(0), tenant="alice", problem=lasso)
+    c.submit(_spec(1), tenant="bob", problem=lasso)
+    res = c.run_all()
+    assert [j.state for j in res.jobs] == ["done", "done"]
+    # 8 spawns total; the 4 of bob's fleet land on alice's retirees
+    assert res.report.warm_hit_rate == pytest.approx(0.5)
+    assert c.provider.tenant_stats["bob"].warm_hits == 4
+    assert c.provider.tenant_stats["alice"].warm_hits == 0
+    # warm ramp is faster: bob's exec span beats alice's
+    a, b = res.jobs
+    assert b.exec_s < a.exec_s
+    # leases all ended with the jobs
+    assert not c.provider.leased
+
+
+def test_isolated_mode_never_shares(lasso):
+    c = Cluster(ClusterConfig(max_concurrent_jobs=1, share_provider=False))
+    c.submit(_spec(0, provider=ProviderConfig(enabled=True)),
+             tenant="alice", problem=lasso)
+    c.submit(_spec(1, provider=ProviderConfig(enabled=True)),
+             tenant="bob", problem=lasso)
+    res = c.run_all()
+    assert res.report.warm_hit_rate == 0.0      # private pools, no reuse
+
+
+def test_per_tenant_billing_rolls_up(lasso):
+    c = Cluster(ClusterConfig(max_concurrent_jobs=2,
+                              max_active_workers=8))
+    for i in range(4):
+        c.submit(_spec(i), tenant=f"t{i % 2}", problem=lasso)
+    res = c.run_all()
+    for t in ("t0", "t1"):
+        want = sum(j.result.cost_usd for j in res.jobs if j.tenant == t)
+        assert res.report.tenant_cost_usd[t] == pytest.approx(want)
+    assert res.report.total_cost_usd == pytest.approx(
+        sum(res.report.tenant_cost_usd.values()))
+
+
+# ---------------------------------------------------------------------------
+# dispatch policies
+# ---------------------------------------------------------------------------
+
+
+def _completion_order(cluster) -> list:
+    done = []
+    cluster.run_all(on_job_done=lambda j: done.append(j.job_id))
+    return done
+
+
+def test_priority_policy_dispatches_high_first(lasso):
+    c = Cluster(ClusterConfig(policy="priority", max_concurrent_jobs=1))
+    c.submit(_spec(0), priority=0, problem=lasso)
+    c.submit(_spec(1), priority=5, problem=lasso)
+    c.submit(_spec(2), priority=1, problem=lasso)
+    order = _completion_order(c)
+    assert order == [1, 2, 0]       # priority 5 > 1 > 0
+
+
+def test_deadline_policy_runs_tightest_first(lasso):
+    c = Cluster(ClusterConfig(policy="deadline", max_concurrent_jobs=1))
+    c.submit(_spec(0), deadline_s=1e9, problem=lasso)
+    c.submit(_spec(1), deadline_s=500.0, problem=lasso)
+    c.submit(_spec(2), deadline_s=5.0, problem=lasso)
+    order = _completion_order(c)
+    assert order == [2, 1, 0]       # earliest absolute deadline first
+    rep = c._report()
+    assert rep.deadlines_met + rep.deadlines_missed == 3
+
+
+def test_fair_share_interleaves_tenants(lasso):
+    """Tenant-blocked submission (alice's two jobs, then bob's two):
+    fifo serves alice twice before bob; fair_share alternates."""
+    orders = {}
+    for policy in ("fifo", "fair_share"):
+        c = Cluster(ClusterConfig(policy=policy, max_concurrent_jobs=1))
+        c.submit(_spec(0), tenant="alice", problem=lasso)
+        c.submit(_spec(1), tenant="alice", problem=lasso)
+        c.submit(_spec(2), tenant="bob", problem=lasso)
+        c.submit(_spec(3), tenant="bob", problem=lasso)
+        res_order = []
+        c.run_all(on_job_done=lambda j: res_order.append(j.tenant))
+        orders[policy] = res_order
+    assert orders["fifo"] == ["alice", "alice", "bob", "bob"]
+    assert orders["fair_share"] == ["alice", "bob", "alice", "bob"]
+
+
+def test_fifo_is_submission_order(lasso):
+    c = Cluster(ClusterConfig(policy="fifo", max_concurrent_jobs=1))
+    for i in range(3):
+        c.submit(_spec(i), priority=i, problem=lasso)  # priority ignored
+    assert _completion_order(c) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# admission control + capacity
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_unplaceable(lasso):
+    c = Cluster(ClusterConfig(max_active_workers=8, max_queued=1))
+    ok = c.submit(_spec(0), problem=lasso)
+    async_job = c.submit(_spec(1, mode="async_"), problem=lasso)
+    too_big = c.submit(_spec(2, w=16), problem=lasso)
+    overflow = c.submit(_spec(3), problem=lasso)
+    assert ok.state == "queued"
+    assert async_job.state == "rejected" and "async" in \
+        async_job.reject_reason
+    assert too_big.state == "rejected" and "caps" in too_big.reject_reason
+    assert overflow.state == "rejected" and "backlog" in \
+        overflow.reject_reason
+    res = c.run_all()
+    assert res.report.n_rejected == 3
+    assert [j.state for j in res.jobs] == ["done", "rejected", "rejected",
+                                           "rejected"]
+
+
+def test_worker_capacity_bounds_concurrency(lasso):
+    """Capacity 8 with W=4 jobs: at most two fleets in flight at once."""
+    c = Cluster(ClusterConfig(max_concurrent_jobs=8, max_active_workers=8))
+    for i in range(4):
+        c.submit(_spec(i), problem=lasso)
+    peak = []
+    orig = c._dispatch
+
+    def spy(job, at):
+        orig(job, at)
+        peak.append(c._active_workers())
+    c._dispatch = spy
+    c.run_all()
+    assert max(peak) <= 8
+
+
+def test_cluster_autoscale_grows_cap_on_queue_depth(lasso):
+    c = Cluster(ClusterConfig(
+        max_concurrent_jobs=8, max_active_workers=16,
+        autoscale=ClusterAutoscaleConfig(policy="queue_depth",
+                                         min_workers=4, max_workers=16,
+                                         cooldown_events=2)))
+    for i in range(6):
+        c.submit(_spec(i), problem=lasso)
+    res = c.run_all()
+    # the cap grew under backlog pressure (and may shrink back to the
+    # floor once the queue drains — that is the policy working)
+    grew = [r for r in res.report.rescales if r[2] > r[1]]
+    assert grew and grew[0][-1].startswith("queue_depth")
+    assert all(j.state == "done" for j in res.jobs)
+
+
+def test_run_all_is_single_shot(lasso):
+    c = Cluster()
+    c.submit(_spec(0), problem=lasso)
+    c.run_all()
+    with pytest.raises(RuntimeError, match="already ran"):
+        c.run_all()
+    # and a late submit fails loudly instead of stranding the job
+    with pytest.raises(RuntimeError, match="already ran"):
+        c.submit(_spec(1), problem=lasso)
+
+
+def test_admission_reserves_per_job_autoscale_ceiling(lasso):
+    """A spec with its own autoscaler can grow mid-run WITHOUT asking
+    the cluster, so admission reserves its ceiling: two W=4 jobs whose
+    autoscalers may reach 8 cannot share a 8-worker cluster, and a
+    ceiling beyond the cluster cap is rejected outright."""
+    from repro.runtime import AutoscaleConfig
+
+    def auto_spec(seed, max_w):
+        s = _spec(seed)
+        return ExperimentSpec(
+            problem=s.problem, problem_kwargs=s.problem_kwargs,
+            scheduler=SchedulerConfig(
+                n_workers=4, admm=AdmmOptions(max_iters=5),
+                pool=PoolConfig(seed=seed),
+                autoscale=AutoscaleConfig(policy="target_efficiency",
+                                          min_workers=2,
+                                          max_workers=max_w)),
+            max_rounds=5)
+
+    c = Cluster(ClusterConfig(max_concurrent_jobs=4,
+                              max_active_workers=8))
+    a = c.submit(auto_spec(0, 8), problem=lasso)
+    b = c.submit(auto_spec(1, 8), problem=lasso)
+    big = c.submit(auto_spec(2, 16), problem=lasso)
+    assert a.worker_demand == b.worker_demand == 8
+    assert big.state == "rejected" and "autoscale" in big.reject_reason
+    concurrent = []
+    orig = c._dispatch
+
+    def spy(job, at):
+        orig(job, at)
+        concurrent.append(c._reserved_workers())
+    c._dispatch = spy
+    c.run_all()
+    assert max(concurrent) <= 8     # never both reserved at once
+    assert a.state == b.state == "done"
+
+
+# ---------------------------------------------------------------------------
+# surface + report
+# ---------------------------------------------------------------------------
+
+
+def test_api_submit_default_cluster_resets(lasso):
+    submit(_spec(0), problem=lasso)
+    res = run_all()
+    assert res.report.n_jobs == 1
+    with pytest.raises(RuntimeError, match="nothing submitted"):
+        run_all()
+
+
+def test_report_is_json_safe_and_complete(lasso):
+    c = Cluster(ClusterConfig(max_concurrent_jobs=2,
+                              max_active_workers=8))
+    for i in range(4):
+        c.submit(_spec(i), tenant=f"t{i % 2}", deadline_s=60.0,
+                 problem=lasso)
+    res = c.run_all()
+    doc = json.loads(json.dumps(res.to_dict()))
+    rep = doc["report"]
+    for key in ("policy", "p50_latency_s", "p95_latency_s",
+                "warm_hit_rate", "total_cost_usd", "tenant_cost_usd",
+                "tenant_slowdown", "makespan_s", "fairness_ratio"):
+        assert key in rep
+    assert rep["p95_latency_s"] >= rep["p50_latency_s"] > 0
+    assert len(doc["jobs"]) == 4
+    assert all(j["slowdown"] >= 1.0 - 1e-9 for j in doc["jobs"])
+    # run results accessible in submit order
+    assert len(res.job_results()) == 4
+
+
+def test_deterministic_given_seeds(lasso):
+    reports = []
+    for _ in range(2):
+        c = Cluster(ClusterConfig(max_concurrent_jobs=2,
+                                  max_active_workers=8))
+        for i in range(4):
+            c.submit(_spec(i), tenant=f"t{i % 2}", problem=lasso)
+        reports.append(c.run_all().report)
+    a, b = reports
+    assert a.p50_latency_s == b.p50_latency_s
+    assert a.total_cost_usd == b.total_cost_usd
+    assert a.warm_hit_rate == b.warm_hit_rate

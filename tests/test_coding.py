@@ -4,10 +4,7 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ModuleNotFoundError:     # CI image without hypothesis
-    from _hypothesis_stub import given, settings, strategies as st
+from _hyp import given, settings, st  # real hypothesis in CI; stub offline
 
 from repro.core import coding
 
@@ -60,3 +57,83 @@ def test_frs_matrix_structure(r_w):
 
 def test_max_stragglers():
     assert coding.max_stragglers(3) == 2
+
+
+# ---------------------------------------------------------------------------
+# FRS semantics at the SCHEDULER boundary (the module used to be
+# unit-tested only in isolation; this drives it through repro.api)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r", [2, 4])
+def test_replicated_mode_straggler_exact_at_scheduler_boundary(r):
+    """The paper's §V-A claim, end to end: with r-fold replication the
+    scheduler's first-responder-wins decode is EXACT under any r-1
+    stragglers per group.  A run with heavy injected stragglers AND
+    mid-run failures must produce the SAME optimization trace (r/s/rho)
+    as the clean run — only the TIMING may differ.  This is FRS with
+    coefficient-1 decoding: every waited responder set is a valid
+    decode set by construction (one replica per group)."""
+    from repro.api import ExperimentSpec, run
+    from repro.core.admm import AdmmOptions
+    from repro.runtime import PoolConfig, SchedulerConfig
+
+    W, rounds = 8, 6
+
+    def go(straggler_frac, fail_rate, seed):
+        return run(ExperimentSpec(
+            problem="lasso",
+            problem_kwargs=dict(n_samples=256, n_features=32),
+            scheduler=SchedulerConfig(
+                n_workers=W, mode="replicated", replication=r,
+                admm=AdmmOptions(max_iters=rounds),
+                pool=PoolConfig(seed=seed,
+                                straggler_frac=straggler_frac,
+                                straggler_slowdown=25.0,
+                                fail_rate_per_round=fail_rate)),
+            max_rounds=rounds))
+
+    clean = go(0.0, 0.0, seed=0)
+    # half the fleet 25x slow, plus random worker deaths: at most r-1
+    # fresh losses per group ever matter, and replicas are exact copies
+    faulty = go(0.5, 0.05, seed=0)
+
+    math_keys = ("r_norm", "s_norm", "rho")
+    for key in math_keys:
+        got = [t[key] for t in faulty.trace]
+        want = [t[key] for t in clean.trace]
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want),
+            err_msg=f"replicated math drifted under stragglers ({key})")
+    np.testing.assert_array_equal(faulty.z, clean.z)
+    # the systems story DID differ: failures caused respawns, and the
+    # injected stragglers show up in per-worker compute time — yet the
+    # first-responder barrier kept the round clock straggler-free
+    assert faulty.n_respawns > 0
+    f_comp = max(float(m.t_comp.max()) for m in faulty.history)
+    c_comp = max(float(m.t_comp.max()) for m in clean.history)
+    assert f_comp > 5.0 * c_comp
+
+
+def test_replicated_waited_sets_decode_exactly(rng):
+    """Bridge the unit tests to the runtime: the scheduler's per-round
+    waited set (one responder per FRS group) IS a decodable responder
+    set — decode_coeffs returns the coefficient-1 row the runtime's
+    stale-free mean assumes."""
+    from repro.api import ExperimentSpec, build
+    from repro.runtime import SchedulerConfig
+
+    W, r = 8, 2
+    _, sched = build(ExperimentSpec(
+        problem="lasso", problem_kwargs=dict(n_samples=256, n_features=32),
+        scheduler=SchedulerConfig(n_workers=W, mode="replicated",
+                                  replication=r)))
+    B = coding.frs_matrix(W, r)
+    # any one-responder-per-group set decodes with coefficients == 1
+    for trial in range(10):
+        resp = np.array([g * r + rng.randint(r) for g in range(W // r)])
+        a = coding.decode_coeffs(B, resp)
+        np.testing.assert_allclose(a, np.ones(len(resp)), atol=1e-4)
+    # and the scheduler's logical-group map matches the FRS layout
+    for wid in range(W):
+        assert sched._logical(wid) == wid // r

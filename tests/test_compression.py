@@ -2,10 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-try:
-    from hypothesis import given, settings, strategies as st
-except ModuleNotFoundError:     # CI image without hypothesis
-    from _hypothesis_stub import given, settings, strategies as st
+from _hyp import given, settings, st  # real hypothesis in CI; stub offline
 
 from repro.optim import compression as C
 

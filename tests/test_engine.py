@@ -9,6 +9,8 @@ compression, both fan-ins, uneven shards (W not dividing the sample
 count), and mid-run ``rescale()`` (batch re-stack).
 """
 import dataclasses
+import json
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -158,3 +160,60 @@ def test_engine_rides_spec_roundtrip():
     spec = ExperimentSpec(problem="lasso",
                           scheduler=SchedulerConfig(engine="batched"))
     assert spec.to_dict()["scheduler"]["engine"] == "batched"
+
+
+# ---------------------------------------------------------------------------
+# Golden-trace determinism: literal pinned numbers per engine x fan-in
+# ---------------------------------------------------------------------------
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "engine_traces.json"
+GOLDEN_KEYS = ("r_norm", "s_norm", "rho", "sim_time")
+GOLDEN_COMBOS = [("loop", "flat"), ("loop", "tree"),
+                 ("batched", "flat"), ("batched", "tree")]
+# the loop engine is near-bitwise-reproducible (the seed-anchor
+# discipline; 1e-5 slack covers LAPACK-build variation in lasso's
+# eigendecomposition); batched is allclose-only (vmapped reductions
+# reorder floats), so its golden tolerance matches the
+# engine-equivalence tolerance above
+GOLDEN_RTOL = {"loop": 1e-5, "batched": 2e-3}
+
+
+def _golden_trace(problem: str, engine: str, fanin: str):
+    res = _run(problem, engine, "sync", fanin=fanin)
+    return {key: [float(row[key]) for row in res.trace]
+            for key in GOLDEN_KEYS}
+
+
+@pytest.mark.parametrize("engine,fanin", GOLDEN_COMBOS,
+                         ids=[f"{e}/{f}" for e, f in GOLDEN_COMBOS])
+@pytest.mark.parametrize("problem", sorted(WORKLOADS))
+def test_golden_trace_pinned(problem, engine, fanin):
+    """Refactor guard for the cluster era: scheduler.py is now stepped
+    one round at a time by runtime/cluster.py, so its single-experiment
+    numbers are pinned LITERALLY (tests/golden/engine_traces.json, one
+    seed, all 4 workloads x both engines x both fan-ins).  A drift here
+    means the math moved, not the plumbing.  To re-pin after an
+    INTENTIONAL model change:  PYTHONPATH=src python tests/test_engine.py
+    (see docs/TESTING.md)."""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    want = golden[problem][f"{engine}/{fanin}"]
+    got = _golden_trace(problem, engine, fanin)
+    rtol = GOLDEN_RTOL[engine]
+    for key in GOLDEN_KEYS:
+        np.testing.assert_allclose(
+            got[key], want[key], rtol=rtol, atol=1e-9,
+            err_msg=f"{problem} {engine}/{fanin} trace key {key!r}")
+
+
+def _regen_golden():
+    doc = {}
+    for problem in sorted(WORKLOADS):
+        doc[problem] = {f"{e}/{f}": _golden_trace(problem, e, f)
+                        for e, f in GOLDEN_COMBOS}
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"re-pinned golden traces -> {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    _regen_golden()

@@ -1,0 +1,204 @@
+"""Property-based hardening of the runtime: codec + provider invariants.
+
+Two subsystems whose correctness arguments are stateful-protocol
+arguments, hammered with randomized schedules:
+
+* ``optim.compression.OmegaCodec`` — the delta-EF sync protocol.  The
+  master's view after an encode must track the true ω within the
+  codec's one-step compression bound, and ``rollback_except`` under an
+  arbitrary partial-barrier delivery schedule must leave the codec in
+  EXACTLY the state of a codec that only ever encoded the delivered
+  messages (no smuggled state from undelivered deltas).
+* ``runtime.provider.Provider`` — the multi-tenant keep-alive pool.
+  Under random interleavings of acquire / cold-provision / release /
+  crash-forfeit across tenants and policies: the idle pool never
+  exceeds its memory capacity, and no eviction policy ever reclaims a
+  LEASED sandbox (leases and the idle pool stay disjoint — a running
+  invocation cannot lose its container).
+
+Runs with real ``hypothesis`` in CI (REQUIRE_HYPOTHESIS=1); offline the
+deterministic stub degrades these to seeded fuzz tests.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.optim.compression import OmegaCodec
+from repro.runtime.provider import Provider, ProviderConfig
+
+# ---------------------------------------------------------------------------
+# OmegaCodec: one-step error bounds
+# ---------------------------------------------------------------------------
+
+D = 48  # vector length for the codec properties
+
+
+def _vec(seed: int, scale: float = 1.0) -> jnp.ndarray:
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(D) * scale, jnp.float32)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.02, 0.5),
+       st.floats(0.01, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_topk_view_error_bounded(seed, topk_frac, scale):
+    """After encode, the master-view error obeys the top-k energy bound:
+    dropping all but the k largest of d coordinates keeps at least k/d
+    of the delta's energy, so ||view - omega|| <= sqrt(1-k/d)||delta||."""
+    codec = OmegaCodec("topk", D, topk_frac=topk_frac)
+    omega = _vec(seed, scale)
+    delta_norm = float(jnp.linalg.norm(omega))       # first delta = omega
+    view = codec.encode(0, omega)
+    err = float(jnp.linalg.norm(view - omega))
+    bound = np.sqrt(max(1.0 - codec.k / D, 0.0)) * delta_norm
+    assert err <= bound + 1e-5 * max(delta_norm, 1.0)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8),
+       st.floats(0.01, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_qsgd_view_error_bounded(seed, bits, scale):
+    """QSGD nearest-level rounding: per-coordinate view error is at most
+    half a quantization step, scale/(2s) with s = 2^(b-1)-1."""
+    codec = OmegaCodec("qsgd", D, qsgd_bits=bits)
+    omega = _vec(seed, scale)
+    view = codec.encode(0, omega)
+    s = (1 << (bits - 1)) - 1
+    step = float(jnp.max(jnp.abs(omega))) / s
+    err_inf = float(jnp.max(jnp.abs(view - omega)))
+    assert err_inf <= step / 2 + 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_topk_repeated_encode_contracts(seed):
+    """Re-encoding the SAME omega shrinks the view error geometrically
+    (each round's delta is the previous error, and top-k keeps >= k/d of
+    its energy) — the delta-EF loop is a contraction, not a drift."""
+    codec = OmegaCodec("topk", D, topk_frac=0.1)
+    omega = _vec(seed)
+    q = np.sqrt(1.0 - codec.k / D)
+    prev = float(jnp.linalg.norm(omega))
+    for _ in range(6):
+        view = codec.encode(0, omega)
+        err = float(jnp.linalg.norm(view - omega))
+        assert err <= q * prev + 1e-5
+        prev = err
+
+
+# ---------------------------------------------------------------------------
+# OmegaCodec: rollback under random partial-barrier schedules
+# ---------------------------------------------------------------------------
+
+schedules = st.lists(
+    st.tuples(st.integers(0, 2 ** 31 - 1),      # round RNG seed
+              st.integers(0, 2 ** 16 - 1)),     # delivered-subset mask bits
+    min_size=1, max_size=6)
+
+
+@pytest.mark.parametrize("method", ["topk", "qsgd"])
+@given(schedules)
+@settings(max_examples=25, deadline=None)
+def test_rollback_equals_delivered_only_replay(method, rounds):
+    """THE partial-barrier invariant: encode-everything-then-rollback-
+    the-undelivered must be indistinguishable from a codec that only
+    ever saw the delivered messages.  Otherwise an undelivered message's
+    content leaks into the shared view and later deltas smuggle it
+    inside a k-sized wire budget."""
+    W = 5
+    real = OmegaCodec(method, D, topk_frac=0.1, qsgd_bits=4)
+    shadow = OmegaCodec(method, D, topk_frac=0.1, qsgd_bits=4)
+    for rseed, mask in rounds:
+        rng = np.random.RandomState(rseed)
+        omegas = [jnp.asarray(rng.randn(D), jnp.float32) for _ in range(W)]
+        delivered = {lw for lw in range(W) if (mask >> lw) & 1}
+        snap = real.snapshot()
+        for lw in range(W):                      # the round encodes ALL
+            real.encode(lw, omegas[lw])
+        real.rollback_except(snap, delivered)
+        for lw in sorted(delivered):             # shadow: delivered only
+            shadow.encode(lw, omegas[lw])
+        assert set(real._sent) == set(shadow._sent)
+        for lw in real._sent:
+            np.testing.assert_array_equal(np.asarray(real._sent[lw]),
+                                          np.asarray(shadow._sent[lw]))
+
+
+# ---------------------------------------------------------------------------
+# Provider: capacity + lease invariants under random multi-tenant load
+# ---------------------------------------------------------------------------
+
+# an operation stream: (op selector, tenant selector, time increment)
+ops_stream = st.lists(
+    st.tuples(st.integers(0, 99), st.integers(0, 3),
+              st.floats(0.0, 30.0)),
+    min_size=1, max_size=60)
+
+
+def _check_invariants(prov: Provider, cap: int):
+    idle_cids = [w.cid for w in prov.idle]
+    assert len(idle_cids) == len(set(idle_cids))          # no duplicates
+    assert len(prov.idle) <= cap, "idle pool exceeded memory capacity"
+    overlap = set(idle_cids) & set(prov.leased)
+    assert not overlap, (f"leased sandbox(es) {overlap} present in the "
+                         f"idle pool — evictable while an invocation "
+                         f"runs on them")
+
+
+@pytest.mark.parametrize("policy",
+                         ["fixed_ttl", "lru", "least_used", "greedy_dual"])
+@given(st.integers(0, 4), ops_stream)
+@settings(max_examples=25, deadline=None)
+def test_provider_capacity_and_lease_invariants(policy, cap, ops):
+    """Random acquire/cold/release/forfeit interleavings across 4
+    tenants: the idle pool never exceeds capacity and no policy ever
+    evicts (or double-books) a leased sandbox."""
+    cfg = ProviderConfig(enabled=True, policy=policy,
+                         warm_capacity_mb=cap * 3008,
+                         keepalive_s=120.0, max_env_age_s=400.0)
+    prov = Provider(cfg)
+    live = {}                    # cid -> (created_at, uses, tenant)
+    t = 0.0
+    for op, tsel, dt in ops:
+        t += dt
+        tenant = f"tenant{tsel}"
+        if op < 45:                                   # launch
+            warm = prov.acquire(t, tenant=tenant)
+            if warm is not None:
+                live[warm.cid] = (warm.created_at, warm.uses, tenant)
+            else:
+                cid = prov.new_cid(tenant)
+                live[cid] = (t, 1, tenant)
+        elif op < 85 and live:                        # clean release
+            cid = sorted(live)[op % len(live)]
+            created_at, uses, ten = live.pop(cid)
+            prov.release(cid=cid, created_at=created_at, uses=uses,
+                         speed=1.0, at=t, tenant=ten)
+        elif live:                                    # crash: forfeit
+            cid = sorted(live)[op % len(live)]
+            live.pop(cid)
+            prov.forfeit(cid)
+        _check_invariants(prov, cap)
+    # every still-live sandbox is still leased, and only those
+    assert set(prov.leased) == set(live)
+    # the ledgers agree with the global counters
+    assert (sum(s.warm_hits for s in prov.tenant_stats.values())
+            == prov.stats.warm_hits)
+    assert (sum(s.cold_misses for s in prov.tenant_stats.values())
+            == prov.stats.cold_misses)
+
+
+def test_provider_cross_tenant_reuse():
+    """A sandbox released by one tenant is acquirable by ANY tenant —
+    and the hit is booked to the acquiring tenant's ledger."""
+    prov = Provider(ProviderConfig(enabled=True, keepalive_s=1e9,
+                                   max_env_age_s=1e9))
+    cid = prov.new_cid("alice")
+    prov.release(cid=cid, created_at=0.0, uses=1, speed=1.0, at=1.0,
+                 tenant="alice")
+    w = prov.acquire(2.0, tenant="bob")
+    assert w is not None and w.cid == cid
+    assert prov.leased[cid] == "bob"
+    assert prov.tenant_stats["bob"].warm_hits == 1
+    assert prov.tenant_stats["alice"].warm_hits == 0
