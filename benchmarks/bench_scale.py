@@ -30,13 +30,13 @@ TARGET_SPEEDUP = 10.0
 
 
 def time_engine(prob, problem_name, pkw, W: int, engine: str,
-                rounds: int) -> dict:
+                rounds: int, kernel: str = "xla") -> dict:
     """Build a fresh scheduler, run one warmup round (jit compile +
     batch stacking), then time ``rounds`` rounds of simulator work."""
     spec = ExperimentSpec(
         problem=problem_name, problem_kwargs=pkw,
         scheduler=SchedulerConfig(
-            n_workers=W, engine=engine,
+            n_workers=W, engine=engine, kernel=kernel,
             admm=AdmmOptions(max_iters=rounds + 1),
             pool=PoolConfig(seed=0)))
     t0 = time.perf_counter()
@@ -69,7 +69,7 @@ def main(args=None) -> dict:
     print(f"[bench_scale] logreg d={pkw['n_features']} "
           f"n={pkw['n_samples']} rounds={args.rounds}")
     print(f"  {'W':>5s}  {'loop s/round':>12s}  {'batched s/round':>15s}  "
-          f"{'speedup':>7s}")
+          f"{'pallas s/round':>14s}  {'speedup':>7s}")
     for W in ws:
         row = {}
         for engine in ("loop", "batched"):
@@ -80,9 +80,25 @@ def main(args=None) -> dict:
             <= 1e-3 * max(abs(row["loop"]["r_norm"]), 1e-9), \
             f"engine divergence at W={W}: {row}"
         row["speedup"] = row["loop"]["round_s"] / row["batched"]["round_s"]
+        # third column: the fused-kernel wrapper path (on CPU its
+        # deterministic jnp oracle — same padded layout the TPU kernels
+        # consume).  Capped at W=1024: the dense staging of the sparse
+        # shards is the kernels' price of admission, and past that the
+        # per-round story is identical.
+        pallas_s = ""
+        if W <= 1024:
+            row["batched_pallas"] = time_engine(prob, "logreg", pkw, W,
+                                                "batched", args.rounds,
+                                                kernel="pallas")
+            assert abs(row["loop"]["r_norm"]
+                       - row["batched_pallas"]["r_norm"]) \
+                <= 1e-3 * max(abs(row["loop"]["r_norm"]), 1e-9), \
+                f"kernel divergence at W={W}: {row}"
+            pallas_s = f"{row['batched_pallas']['round_s']:14.4f}"
         results["per_w"][W] = row
         print(f"  {W:5d}  {row['loop']['round_s']:12.4f}  "
-              f"{row['batched']['round_s']:15.4f}  {row['speedup']:6.1f}x")
+              f"{row['batched']['round_s']:15.4f}  {pallas_s:>14s}  "
+              f"{row['speedup']:6.1f}x")
 
     met = None
     if TARGET_W in results["per_w"]:

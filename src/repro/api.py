@@ -78,6 +78,7 @@ def _trace_row(m: RoundMetrics) -> Dict[str, float]:
         "t_idle_mean": float(m.t_idle.mean()),
         "t_idle_std": float(m.t_idle.std()),
         "inner_mean": float(m.inner_iters.mean()),
+        "z_nnz": m.z_nnz,
     }
 
 

@@ -1,22 +1,30 @@
-"""Fused logistic loss+gradient Pallas TPU kernel.
+"""Fused margin-loss value+gradient Pallas TPU kernels (logistic + hinge).
 
 The ADMM worker's inner-loop hot spot is the FISTA gradient evaluation
-  f(x)    = sum_n log(1 + exp(-b_n <a_n, x>))
-  grad(x) = A^T (-b * sigmoid(-b Ax))
-which naively is two full passes over A (one for Ax, one for A^T c).  This
-kernel fuses both into ONE pass: for each row tile of A held in VMEM it
-computes the margins (MXU matvec), the loss partial and the coefficient
-vector (VPU transcendentals), and immediately applies the transposed-tile
-matvec for the gradient contribution — so A is streamed from HBM exactly
-once per FISTA iteration.  Loss and gradient accumulate in VMEM across the
-(sequential) row-tile grid.
+  f(x)    = sum_n l(b_n <a_n, x>)
+  grad(x) = A^T (l'(b Ax) * b)
+which naively is two full passes over A (one for Ax, one for A^T c).  These
+kernels fuse both into ONE pass: for each row tile of A held in VMEM they
+compute the margins (MXU matvec), the loss partial and the coefficient
+vector (VPU elementwise/transcendentals), and immediately apply the
+transposed-tile matvec for the gradient contribution — so A is streamed
+from HBM exactly once per FISTA iteration.  Loss and gradient accumulate
+in VMEM across the (sequential) row-tile grid.
+
+Two margin losses share the one kernel body (static ``loss`` switch):
+
+  * ``logistic`` — l(m) = log(1 + exp(-m)), the paper's workload;
+  * ``hinge``    — the quadratically-smoothed (Huberized) hinge of
+    problems/svm.py, l_gamma(m) piecewise in (1 - m).
 
 TPU adaptation (DESIGN.md §7): the paper's CSR-sparse rows (p=0.001) become
 dense VMEM tiles — gather/scatter on the sparse structure would idle the MXU;
 dense row tiles of the d<=~12k feature dim fit VMEM comfortably.
 
-Padding contract (handled by ops.fused_logistic_vjp): rows are padded with
+Padding contract (handled by ops.fused_*_vjp): rows are padded with
 mask=0 (excluded from loss and grad), the feature dim with zero columns.
+A leading worker axis batches via ``jax.vmap`` — Pallas lifts the batch
+dimension onto the grid, so all W lanes run in one kernel launch.
 """
 from __future__ import annotations
 
@@ -30,7 +38,8 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_ROWS = 256
 
 
-def _kernel(a_ref, b_ref, mask_ref, x_ref, loss_ref, grad_ref):
+def _margin_kernel(loss: str, gamma: float,
+                   a_ref, b_ref, mask_ref, x_ref, loss_ref, grad_ref):
     i = pl.program_id(0)
 
     a = a_ref[...]                                   # (TN, D)
@@ -38,15 +47,31 @@ def _kernel(a_ref, b_ref, mask_ref, x_ref, loss_ref, grad_ref):
     mask = mask_ref[...]                             # (TN, 1)
     x = x_ref[...]                                   # (1, D)
 
-    # margins m_n = -b_n <a_n, x>   (MXU: (TN,D) @ (D,1))
+    # signed activation <a_n, x>   (MXU: (TN,D) @ (D,1))
     ax = jax.lax.dot_general(a, x.T, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)  # (TN,1)
-    m = -b * ax
-    # loss partial: sum mask * log1p(exp(m)), stable via logaddexp
-    loss_part = jnp.sum(mask * jnp.logaddexp(0.0, m))
-    # coefficients c_n = -b_n * sigmoid(m_n), masked
-    c = mask * (-b) * jax.nn.sigmoid(m)              # (TN,1)
-    # gradient partial: A^T c  (MXU: (D,TN) @ (TN,1) -> do (1,TN)@(TN,D))
+    if loss == "logistic":
+        # l(m) = log1p(exp(-m)) at m = b*ax; stable via logaddexp
+        neg_m = -b * ax
+        val = jnp.logaddexp(0.0, neg_m)
+        dldax = (-b) * jax.nn.sigmoid(neg_m)         # d l / d ax
+    elif loss == "hinge":
+        # smoothed hinge (Rennie & Srebro '05), gamma the smoothing width
+        m = b * ax
+        val = jnp.where(m >= 1.0, 0.0,
+                        jnp.where(m <= 1.0 - gamma,
+                                  1.0 - m - gamma / 2,
+                                  (1.0 - m) ** 2 / (2 * gamma)))
+        dldm = jnp.where(m >= 1.0, 0.0,
+                         jnp.where(m <= 1.0 - gamma,
+                                   -1.0, -(1.0 - m) / gamma))
+        dldax = dldm * b
+    else:  # pragma: no cover - static arg, guarded by the wrappers
+        raise ValueError(f"unknown margin loss {loss!r}")
+
+    loss_part = jnp.sum(mask * val)
+    c = mask * dldax                                 # (TN,1)
+    # gradient partial: A^T c  (MXU: (1,TN) @ (TN,D))
     gpart = jax.lax.dot_general(c.T, a, (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (1,D)
 
@@ -59,15 +84,13 @@ def _kernel(a_ref, b_ref, mask_ref, x_ref, loss_ref, grad_ref):
     grad_ref[...] += gpart
 
 
-def logistic_vjp_pallas(a, b, mask, x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
-                        interpret: bool = False):
-    """a (N, D), b (N, 1), mask (N, 1), x (1, D); N % block_rows == 0,
-    D % 128 == 0.  Returns (loss (1,1) f32, grad (1,D) f32)."""
+def _margin_vjp_pallas(a, b, mask, x, *, loss: str, gamma: float,
+                       block_rows: int, interpret: bool):
     N, D = a.shape
     assert N % block_rows == 0 and D % 128 == 0, (N, D)
     grid = (N // block_rows,)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_margin_kernel, loss, gamma),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
@@ -85,3 +108,20 @@ def logistic_vjp_pallas(a, b, mask, x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
         ],
         interpret=interpret,
     )(a, b, mask, x)
+
+
+def logistic_vjp_pallas(a, b, mask, x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                        interpret: bool = False):
+    """a (N, D), b (N, 1), mask (N, 1), x (1, D); N % block_rows == 0,
+    D % 128 == 0.  Returns (loss (1,1) f32, grad (1,D) f32)."""
+    return _margin_vjp_pallas(a, b, mask, x, loss="logistic", gamma=0.0,
+                              block_rows=block_rows, interpret=interpret)
+
+
+def svm_vjp_pallas(a, b, mask, x, *, gamma: float,
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False):
+    """Smoothed-hinge twin of ``logistic_vjp_pallas`` (problems/svm.py's
+    loss); same shape/padding contract, ``gamma`` the smoothing width."""
+    return _margin_vjp_pallas(a, b, mask, x, loss="hinge", gamma=gamma,
+                              block_rows=block_rows, interpret=interpret)

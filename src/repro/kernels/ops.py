@@ -26,10 +26,18 @@ from repro.kernels import soft_threshold as st_k
 
 
 def _mode() -> str:
-    """'pallas' (TPU), 'interpret' (forced), or 'ref' (CPU default)."""
+    """'pallas' (TPU), 'interpret' (forced), or 'ref' (CPU default).
+
+    Unrecognized ``REPRO_PALLAS`` values RAISE instead of silently falling
+    through to the backend default — a typo ('interperet') would otherwise
+    quietly run the jnp oracle while claiming kernel coverage."""
     env = os.environ.get("REPRO_PALLAS", "")
     if env in ("interpret", "ref", "pallas"):
         return env
+    if env:
+        raise ValueError(
+            f"REPRO_PALLAS={env!r} is not a recognized mode; use 'ref', "
+            f"'interpret', or 'pallas' (or unset for the backend default)")
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
@@ -38,33 +46,70 @@ def _round_up(n: int, m: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# fused logistic value+grad
+# fused margin-loss value+grad (logistic / smoothed hinge)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "mode"))
-def _logistic_impl(A, b, x, *, block_rows, mode):
+@functools.partial(jax.jit,
+                   static_argnames=("loss", "gamma", "block_rows", "mode"))
+def _margin_impl(A, b, x, mask, *, loss, gamma, block_rows, mode):
     N, D = A.shape
-    Np = _round_up(N, block_rows)
+    # small shards tile to the f32 sublane multiple (8) rather than the
+    # full default row tile — a W=1024 fleet of 8-row lanes must not pad
+    # every lane to 256 rows
+    br = min(block_rows, _round_up(N, 8))
+    Np = _round_up(N, br)
     Dp = _round_up(D, 128)
     a_p = jnp.zeros((Np, Dp), jnp.float32).at[:N, :D].set(A)
     b_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(b)
-    mask = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(1.0)
+    m_p = jnp.zeros((Np, 1), jnp.float32).at[:N, 0].set(mask)
     x_p = jnp.zeros((1, Dp), jnp.float32).at[0, :D].set(x)
     if mode == "ref":
-        loss, grad = ref.logistic_vjp_ref(a_p, b_p, mask, x_p)
+        if loss == "logistic":
+            f, grad = ref.logistic_vjp_ref(a_p, b_p, m_p, x_p)
+        else:
+            f, grad = ref.svm_vjp_ref(a_p, b_p, m_p, x_p, gamma)
     else:
-        loss, grad = lv_k.logistic_vjp_pallas(
-            a_p, b_p, mask, x_p, block_rows=block_rows,
-            interpret=(mode == "interpret"))
-    return loss[0, 0], grad[0, :D]
+        fn = (lv_k.logistic_vjp_pallas if loss == "logistic"
+              else functools.partial(lv_k.svm_vjp_pallas, gamma=gamma))
+        f, grad = fn(a_p, b_p, m_p, x_p, block_rows=br,
+                     interpret=(mode == "interpret"))
+    return f[0, 0], grad[0, :D]
 
 
-def fused_logistic_vjp(A, b, x, *, block_rows: int = lv_k.DEFAULT_BLOCK_ROWS):
-    """Single-pass loss+grad of sum_n log1p(exp(-b_n <a_n, x>)).
+def _margin_dispatch(A, b, x, mask, *, loss, gamma, block_rows):
+    """Shared entry: accepts a leading worker axis (A (W,N,D), b/mask
+    (W,N), x (W,D)) and per-lane row masks; ``jax.vmap`` lifts the batch
+    onto the Pallas grid, so all W lanes run in ONE kernel launch."""
+    mode = _mode()
+    one = functools.partial(_margin_impl, loss=loss, gamma=gamma,
+                            block_rows=block_rows, mode=mode)
+    if A.ndim == 3:
+        if mask is None:
+            mask = jnp.ones(A.shape[:2], jnp.float32)
+        return jax.vmap(one)(A, b, x, mask)
+    if mask is None:
+        mask = jnp.ones((A.shape[0],), jnp.float32)
+    return one(A, b, x, mask)
 
-    A (N, D) f32, b (N,) ±1, x (D,).  Returns (loss scalar, grad (D,))."""
-    return _logistic_impl(A, b, x, block_rows=block_rows, mode=_mode())
+
+def fused_logistic_vjp(A, b, x, *, mask=None,
+                       block_rows: int = lv_k.DEFAULT_BLOCK_ROWS):
+    """Single-pass loss+grad of sum_n mask_n * log1p(exp(-b_n <a_n, x>)).
+
+    A (N, D) f32, b (N,) ±1, x (D,); ``mask`` an optional {0,1} row mask
+    (padded rows contribute exactly zero).  A leading worker axis batches:
+    A (W, N, D), b/mask (W, N), x (W, D) -> (loss (W,), grad (W, D))."""
+    return _margin_dispatch(A, b, x, mask, loss="logistic", gamma=0.0,
+                            block_rows=block_rows)
+
+
+def fused_svm_vjp(A, b, x, *, gamma: float, mask=None,
+                  block_rows: int = lv_k.DEFAULT_BLOCK_ROWS):
+    """Smoothed-hinge twin of ``fused_logistic_vjp`` (problems/svm.py's
+    loss; ``gamma`` the smoothing width).  Same shapes/batching/masking."""
+    return _margin_dispatch(A, b, x, mask, loss="hinge", gamma=float(gamma),
+                            block_rows=block_rows)
 
 
 def logistic_value_and_grad(A, b):
@@ -73,6 +118,45 @@ def logistic_value_and_grad(A, b):
     def vg(x):
         return fused_logistic_vjp(A, b, x)
     return vg
+
+
+# ---------------------------------------------------------------------------
+# fused softmax value+grad (ref-backed)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "mode"))
+def _softmax_impl(A, y, x, mask, *, n_classes, mode):
+    # mode rides along only so the jit cache stays keyed consistently with
+    # the other wrappers; every mode runs the jnp oracle (see below)
+    del mode
+    D = A.shape[1]
+    X = x.reshape(D, n_classes)
+    f, grad = ref.softmax_vjp_ref(A, y, mask[:, None], X)
+    return f[0, 0], grad.reshape(-1)
+
+
+def fused_softmax_vjp(A, y, x, *, n_classes: int, mask=None):
+    """Fused multinomial value+grad with the same wrapper contract as the
+    margin kernels: A (N, D), y (N,) int, x the FLATTENED (D*C,) variable,
+    optional row mask; leading worker axis batches.
+
+    No Pallas body yet — padding the class dim to the 128-lane multiple
+    changes logsumexp (every padded class contributes exp(0)) and would
+    need a class mask woven through the reduction, while C is small and
+    XLA already fuses the (N,D)@(D,C) pair well.  All three modes run the
+    jnp oracle (``ref.softmax_vjp_ref``); the differential harness still
+    exercises this path so a future Pallas port lands against pinned
+    numbers."""
+    mode = _mode()
+    one = functools.partial(_softmax_impl, n_classes=n_classes, mode=mode)
+    if A.ndim == 3:
+        if mask is None:
+            mask = jnp.ones(A.shape[:2], jnp.float32)
+        return jax.vmap(one)(A, y, x, mask)
+    if mask is None:
+        mask = jnp.ones((A.shape[0],), jnp.float32)
+    return one(A, y, x, mask)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,35 @@ def logistic_vjp_ref(a, b, mask, x):
     return loss.reshape(1, 1), grad
 
 
+def svm_vjp_ref(a, b, mask, x, gamma):
+    """Smoothed-hinge twin of ``logistic_vjp_ref`` (problems/svm.py's loss).
+    a (N,D), b (N,1), mask (N,1), x (1,D) -> (loss (1,1), grad (1,D))."""
+    m = b * (a @ x.T)                                 # (N,1)
+    val = jnp.where(m >= 1.0, 0.0,
+                    jnp.where(m <= 1.0 - gamma,
+                              1.0 - m - gamma / 2,
+                              (1.0 - m) ** 2 / (2 * gamma)))
+    dldm = jnp.where(m >= 1.0, 0.0,
+                     jnp.where(m <= 1.0 - gamma, -1.0, -(1.0 - m) / gamma))
+    c = mask * dldm * b                               # (N,1)
+    loss = jnp.sum(mask * val)
+    return loss.reshape(1, 1), c.T @ a
+
+
+def softmax_vjp_ref(a, y, mask, X):
+    """Fused multinomial value+grad (problems/softmax.py's loss).
+    a (N,D), y (N,) int labels, mask (N,1), X (D,C) -> (loss (1,1),
+    grad (D,C)).  Masked rows contribute exactly zero to both."""
+    C = X.shape[1]
+    logits = a @ X                                    # (N, C)
+    lse = jax.scipy.special.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    loss = jnp.sum(mask[:, 0] * (lse - picked))
+    resid = mask * (jax.nn.softmax(logits, axis=1)
+                    - jax.nn.one_hot(y, C, dtype=X.dtype))  # (N, C)
+    return loss.reshape(1, 1), a.T @ resid
+
+
 def soft_threshold_ref(omega, z_old, thr):
     """omega, z_old (1,D), thr (1,1) -> (z_new, ssq (1,1), nnz (1,1))."""
     z_new = prox_mod.soft_threshold(omega, thr[0, 0])

@@ -42,12 +42,25 @@ def _kernel(omega_ref, zold_ref, thr_ref, z_ref, ssq_ref, nnz_ref):
     nnz_ref[...] += nnz_part.reshape(1, 1)
 
 
+def _pick_block(D: int, block: int) -> int:
+    """Largest 128-multiple tile <= ``block`` that DIVIDES D.  The naive
+    ``min(block, D)`` is wrong whenever D exceeds the block but is not a
+    multiple of it (e.g. D = 8320 vs the 8192 default) — the grid then
+    needs a ragged last tile the kernel does not mask.  Walking down in
+    lane-multiples always terminates at 128, which divides any padded D."""
+    blk = min(block, D)
+    blk -= blk % 128
+    while blk > 128 and D % blk:
+        blk -= 128
+    return blk
+
+
 def soft_threshold_pallas(omega, z_old, thr, *, block: int = DEFAULT_BLOCK,
                           interpret: bool = False):
     """omega, z_old (1, D) f32; thr (1, 1) f32; D % 128 == 0.
     Returns (z_new (1,D), ssq (1,1), nnz (1,1))."""
     _, D = omega.shape
-    blk = min(block, D)
+    blk = _pick_block(D, block)
     assert D % blk == 0 and blk % 128 == 0, (D, blk)
     grid = (D // blk,)
     return pl.pallas_call(

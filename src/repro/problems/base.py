@@ -28,9 +28,14 @@ Contract (what the scheduler calls):
   * ``prox_h(v, t)`` — the master's prox of the global regularizer h.
 
 Batched-engine contract (optional; ``SchedulerConfig(engine="batched")``):
-  * ``solve_all(xs, us, z, rho)`` — all W worker bodies in ONE jitted,
-    vmapped device call; provided by the ``BatchedShardProblem`` mixin
-    for any workload that implements ``_masked_loss_value_and_grad``.
+  * ``solve_all(xs, us, z, rho, kernel="xla")`` — all W worker bodies in
+    ONE jitted, vmapped device call; provided by the
+    ``BatchedShardProblem`` mixin for any workload that implements
+    ``_masked_loss_value_and_grad``.  ``kernel="pallas"`` routes the
+    masked loss through the fused Pallas wrappers (``repro.kernels.ops``)
+    via the optional ``_masked_kernel_loss_value_and_grad`` /
+    ``kernel_batch_shards`` hooks (``SchedulerConfig(kernel="pallas")``
+    selects it; the default falls back to the jnp path).
 
 Conformance contract (what ``tests/test_problems.py`` additionally checks
 for every REGISTERED workload):
@@ -144,6 +149,21 @@ def solve_augmented(vg: Callable, x0, center, rho, fixed: Optional[int],
     return x_new, info.k
 
 
+def densify_sparse_rows(idx, vals, d: int) -> np.ndarray:
+    """Gather-format sparse rows (idx (N, k) int, vals (N, k)) -> dense
+    (N, d) rows, duplicate indices summed — exactly the matrix whose row
+    dot-products the sparse path computes as ``sum(vals * x[idx])``.
+    Used to stage shards for the Pallas kernels, whose MXU tiles are
+    dense (see kernels/logistic_vjp.py's TPU-adaptation note)."""
+    idx = np.asarray(idx)
+    vals = np.asarray(vals)
+    n, k = idx.shape
+    a = np.zeros((n, d), vals.dtype)
+    np.add.at(a, (np.repeat(np.arange(n), k), idx.reshape(-1)),
+              vals.reshape(-1))
+    return a
+
+
 # ---------------------------------------------------------------------------
 # Batched execution: all W subproblems in one XLA call
 # ---------------------------------------------------------------------------
@@ -185,11 +205,32 @@ class BatchedShardProblem:
 
     _batch_cache: Optional[Dict[int, Tuple]] = None
     _batched_solver_cache: Optional[Dict[Tuple, Callable]] = None
+    # lam for h(z) = lam * ||z||_1 when the master regularizer is l1 —
+    # lets the scheduler fuse the z-update / dual-residual / sparsity
+    # telemetry into ONE pass (kernels/soft_threshold) under
+    # SchedulerConfig(kernel="pallas").  None = not (known to be) l1.
+    h_l1_lam: Optional[float] = None
 
     # -- host hooks ---------------------------------------------------------
     def _masked_loss_value_and_grad(self, shard, mask) -> Callable:
         """vg(x) -> (f, grad) with padded rows contributing exactly 0."""
         raise NotImplementedError
+
+    def _masked_kernel_loss_value_and_grad(self, shard, mask) -> Callable:
+        """Fused-kernel twin of ``_masked_loss_value_and_grad``: vg built
+        on ``repro.kernels.ops`` so each FISTA iteration streams the
+        shard through ONE fused Pallas pass (value+grad together) instead
+        of XLA's separate forward/backward matvecs.  The default falls
+        back to the jnp path, so ``kernel="pallas"`` is safe on any
+        batched workload; built-ins override it (logreg/svm/softmax)."""
+        return self._masked_loss_value_and_grad(shard, mask)
+
+    def kernel_batch_shards(self, n_workers: int) -> Tuple:
+        """The stacked batch the KERNEL solver consumes — same contract
+        as ``batch_shards``.  Workloads whose native shard layout is not
+        kernel-friendly override this (logreg/svm densify their sparse
+        gather-format shards here, cached per W)."""
+        return self.batch_shards(n_workers)
 
     def supports_batched(self) -> bool:
         """True when this workload implements the batched path (either
@@ -198,6 +239,14 @@ class BatchedShardProblem:
         return (cls.solve_all is not BatchedShardProblem.solve_all
                 or cls._masked_loss_value_and_grad
                 is not BatchedShardProblem._masked_loss_value_and_grad)
+
+    def supports_kernel(self) -> bool:
+        """True when ``solve_all(..., kernel="pallas")`` is accepted.
+        Any batched workload qualifies (the kernel hook defaults to the
+        jnp fallback); the scheduler checks this before passing the
+        kwarg so third-party ``solve_all`` overrides with the pre-kernel
+        signature keep working."""
+        return self.supports_batched()
 
     # -- stacking -----------------------------------------------------------
     def batch_shards(self, n_workers: int) -> Tuple:
@@ -232,34 +281,44 @@ class BatchedShardProblem:
         return self._batch_cache[n_workers]
 
     # -- the one-call solver ------------------------------------------------
-    def _batched_solver(self, shape_key: Tuple) -> Callable:
+    def _batched_solver(self, shape_key: Tuple,
+                        kernel: str = "xla") -> Callable:
         if self._batched_solver_cache is None:
             self._batched_solver_cache = {}
-        if shape_key not in self._batched_solver_cache:
+        cache_key = (shape_key, kernel)
+        if cache_key not in self._batched_solver_cache:
             fista_opts = self.fista
             fixed = self.fixed_inner
+            hook = (self._masked_kernel_loss_value_and_grad
+                    if kernel == "pallas"
+                    else self._masked_loss_value_and_grad)
 
             @jax.jit
             def run_all(batch, mask, xs, z, us, rho):
                 def one(shard, m, x0, u):
-                    vg = self._masked_loss_value_and_grad(shard, m)
+                    vg = hook(shard, m)
                     return solve_augmented(vg, x0, z - u, rho, fixed,
                                            fista_opts)
 
                 return jax.vmap(one, in_axes=(0, 0, 0, 0))(
                     batch, mask, xs, us)
 
-            self._batched_solver_cache[shape_key] = run_all
-        return self._batched_solver_cache[shape_key]
+            self._batched_solver_cache[cache_key] = run_all
+        return self._batched_solver_cache[cache_key]
 
     def solve_all(self, xs: jnp.ndarray, us: jnp.ndarray, z: jnp.ndarray,
-                  rho: float) -> Tuple[jnp.ndarray, np.ndarray]:
+                  rho: float, kernel: str = "xla"
+                  ) -> Tuple[jnp.ndarray, np.ndarray]:
         """All W Algorithm-2 bodies in one device call: returns
-        (x_new (W, d), per-worker real inner-iteration counts (W,))."""
+        (x_new (W, d), per-worker real inner-iteration counts (W,)).
+        ``kernel="pallas"`` routes each lane's loss+grad through the
+        fused kernel wrappers (vmap lifts them onto one Pallas grid)."""
         n_workers = int(xs.shape[0])
-        batch, mask = self.batch_shards(n_workers)
+        batch, mask = (self.kernel_batch_shards(n_workers)
+                       if kernel == "pallas"
+                       else self.batch_shards(n_workers))
         shape_key = tuple(l.shape for l in jax.tree_util.tree_leaves(batch))
-        run_all = self._batched_solver(shape_key)
+        run_all = self._batched_solver(shape_key, kernel)
         xs_new, ks = run_all(batch, mask, xs, z, us,
                              jnp.asarray(rho, self.dtype))
         return xs_new, np.asarray(ks)

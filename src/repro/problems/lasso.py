@@ -127,9 +127,14 @@ class LassoProblem(base.FistaShardProblem):
             self._factor_cache[key] = (evals, evecs, Atb)
         return self._factor_cache[key]
 
-    def solve_all(self, xs, us, z, rho):
+    def solve_all(self, xs, us, z, rho, kernel: str = "xla"):
+        # the direct path has no streaming loss to fuse — it is two dense
+        # matvecs against a cached factorization — so kernel="pallas"
+        # leaves the worker side untouched (the scheduler's fused
+        # z-update still applies); direct=False routes the kwarg to the
+        # shared FISTA engine
         if not self.direct:
-            return super().solve_all(xs, us, z, rho)
+            return super().solve_all(xs, us, z, rho, kernel=kernel)
         n_workers = int(xs.shape[0])
         evals, evecs, Atb = self._batched_factor(n_workers)
         x_new = _lasso_direct_all(evals, evecs, Atb, z, us,
@@ -138,6 +143,10 @@ class LassoProblem(base.FistaShardProblem):
 
     def prox_h(self, v, t):
         return prox.prox_l1(v, t, self.lam1)
+
+    @property
+    def h_l1_lam(self):
+        return self.lam1
 
     def h_value(self, z) -> float:
         return self.lam1 * float(jnp.sum(jnp.abs(z)))

@@ -9,6 +9,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fista import FistaOptions
 from repro.problems import base
@@ -126,9 +127,42 @@ class LogRegProblem(base.BatchedShardProblem):
             return f, grad
         return vg
 
+    # -- fused-kernel path (SchedulerConfig(kernel="pallas")) ---------------
+    _kernel_batch_cache: Optional[Dict[int, Tuple]] = None
+
+    def kernel_batch_shards(self, n_workers: int):
+        """Dense twin of ``batch_shards``: the Pallas margin kernel
+        streams dense MXU row tiles, so the sparse gather-format shards
+        are scattered into (W, Nmax, d) rows once per fleet size (cached;
+        ``rescale()`` to a new W re-densifies from the stacked batch)."""
+        if self._kernel_batch_cache is None:
+            self._kernel_batch_cache = {}
+        if n_workers not in self._kernel_batch_cache:
+            (idx, vals, b), mask = self.batch_shards(n_workers)
+            d = self.cfg.n_features
+            dense = np.stack([base.densify_sparse_rows(idx[w], vals[w], d)
+                              for w in range(n_workers)])
+            self._kernel_batch_cache[n_workers] = (
+                (jnp.asarray(dense, self.dtype), b), mask)
+        return self._kernel_batch_cache[n_workers]
+
+    def _masked_kernel_loss_value_and_grad(self, shard, mask):
+        from repro.kernels import ops
+        A, b = shard
+
+        def vg(x):
+            return ops.fused_logistic_vjp(A, b, x, mask=mask)
+        return vg
+
     def prox_h(self, v, t):
         from repro.core import prox
         return prox.prox_l1(v, t, self.cfg.lam1)
+
+    @property
+    def h_l1_lam(self):
+        """prox_h above is soft-thresholding at lam1*t — exposing lam1 lets
+        the scheduler fuse the z-update (kernel="pallas")."""
+        return self.cfg.lam1
 
     def objective(self, x, n_workers: int) -> float:
         """Full phi(x) for convergence reporting."""

@@ -98,8 +98,26 @@ class SoftmaxProblem(base.FistaShardProblem):
             return f, (A.T @ resid).reshape(-1)
         return vg
 
+    # -- fused-kernel path (SchedulerConfig(kernel="pallas")) ---------------
+    def _masked_kernel_loss_value_and_grad(self, shard, mask):
+        # shards are already dense, so the default kernel_batch_shards
+        # (= batch_shards) is the right staging; the fused wrapper is
+        # ref-backed in every mode (see ops.fused_softmax_vjp) but keeps
+        # this workload on the kernel call contract
+        from repro.kernels import ops
+        A, y = shard
+        C = self.n_classes
+
+        def vg(x):
+            return ops.fused_softmax_vjp(A, y, x, n_classes=C, mask=mask)
+        return vg
+
     def prox_h(self, v, t):
         return prox.prox_l1(v, t, self.lam1)
+
+    @property
+    def h_l1_lam(self):
+        return self.lam1
 
     def h_value(self, z) -> float:
         return self.lam1 * float(jnp.sum(jnp.abs(z)))

@@ -22,6 +22,7 @@ stall plain gradient steps; FISTA's momentum + backtracking handle it).
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.logreg_paper import scaled
 from repro.core import prox
@@ -95,8 +96,39 @@ class SVMProblem(base.FistaShardProblem):
             return jnp.sum(mask * val), grad
         return vg
 
+    # -- fused-kernel path (SchedulerConfig(kernel="pallas")) ---------------
+    _kernel_batch_cache = None
+
+    def kernel_batch_shards(self, n_workers: int):
+        """Dense twin of ``batch_shards`` for the Pallas margin kernel
+        (same staging as logreg: sparse gather-format rows scattered to
+        dense MXU tiles once per fleet size, cached per W)."""
+        if self._kernel_batch_cache is None:
+            self._kernel_batch_cache = {}
+        if n_workers not in self._kernel_batch_cache:
+            (idx, vals, b), mask = self.batch_shards(n_workers)
+            d = self.n_features
+            dense = np.stack([base.densify_sparse_rows(idx[w], vals[w], d)
+                              for w in range(n_workers)])
+            self._kernel_batch_cache[n_workers] = (
+                (jnp.asarray(dense, self.dtype), b), mask)
+        return self._kernel_batch_cache[n_workers]
+
+    def _masked_kernel_loss_value_and_grad(self, shard, mask):
+        from repro.kernels import ops
+        A, b = shard
+        gamma = self.smoothing
+
+        def vg(x):
+            return ops.fused_svm_vjp(A, b, x, gamma=gamma, mask=mask)
+        return vg
+
     def prox_h(self, v, t):
         return prox.prox_l1(v, t, self.lam1)
+
+    @property
+    def h_l1_lam(self):
+        return self.lam1
 
     def h_value(self, z) -> float:
         return self.lam1 * float(jnp.sum(jnp.abs(z)))

@@ -89,6 +89,18 @@ class SchedulerConfig:
     # async_ paces itself per-arrival (a batching window of 1), so the
     # engine setting only changes the synchronous-family round path.
     engine: str = "loop"
+    # numeric kernel backend inside the round:
+    #   "xla"    — the default; byte-identical to the pre-kernel code path;
+    #   "pallas" — route the hot math through the fused Pallas kernels
+    #              (repro.kernels.ops): with engine="batched" every lane's
+    #              FISTA loss+grad streams through ONE fused margin-kernel
+    #              launch per iteration (vmap lifts the batch onto the
+    #              Pallas grid), and the master's z-update / dual-residual
+    #              / sparsity telemetry fuse into one soft-threshold pass
+    #              (l1-prox f32 workloads; others keep the jnp z-update).
+    #              On CPU the wrappers honor REPRO_PALLAS (interpret/ref) —
+    #              numerically allclose to "xla", not bitwise.
+    kernel: str = "xla"
     drop_frac: float = 0.1        # drop_slowest: fraction not waited for
     replication: int = 2          # replicated: r
     async_batch: int = 4          # async_: S arrivals per z-update
@@ -143,6 +155,10 @@ class RoundMetrics(NamedTuple):
     t_fanin_wait: float = 0.0    # master drain past the last omega arrival
     cost_usd: float = 0.0        # cumulative run cost (runtime.billing)
     n_workers: int = 0           # fleet size this round (autoscale varies it)
+    # kernel-era field: nnz(z) after the round's soft-threshold, reported
+    # for free by the fused z-update (kernel="pallas" on l1 workloads);
+    # -1 when the jnp z-update ran (it does not compute sparsity)
+    z_nnz: int = -1
 
 
 class Scheduler:
@@ -197,6 +213,18 @@ class Scheduler:
                 f"batched contract (solve_all / _masked_loss_value_and_grad"
                 f" — see repro.problems.BatchedShardProblem); "
                 f"{type(problem).__name__} does not")
+        if cfg.kernel not in ("xla", "pallas"):
+            raise ValueError(f"kernel must be 'xla' or 'pallas', "
+                             f"got {cfg.kernel!r}")
+        self._kernel_pallas = cfg.kernel == "pallas"
+        if (self._kernel_pallas and self._engine_batched
+                and not getattr(problem, "supports_kernel", lambda: False)()):
+            raise ValueError(
+                f"kernel='pallas' with engine='batched' needs the problem "
+                f"to accept solve_all(..., kernel=...) (see "
+                f"repro.problems.BatchedShardProblem.supports_kernel); "
+                f"{type(problem).__name__} does not")
+        self._z_nnz = -1
         # message size: the paper sends (q, ω) — d+1 f32 dense; the codec
         # shrinks it (and lossy-codes the ω the master sees) when
         # compression is on
@@ -301,8 +329,15 @@ class Scheduler:
         r = self.x - self.z[None, :]
         u_new = self.u + r
         q = np.asarray(jnp.einsum("wd,wd->w", r, r), np.float64)
-        xs_new, iters = self.problem.solve_all(self.x, u_new, self.z,
-                                               self.rho)
+        # the kernel kwarg is only passed on the pallas path, so
+        # third-party solve_all overrides with the pre-kernel signature
+        # keep working under the default config
+        if self._kernel_pallas:
+            xs_new, iters = self.problem.solve_all(self.x, u_new, self.z,
+                                                   self.rho, kernel="pallas")
+        else:
+            xs_new, iters = self.problem.solve_all(self.x, u_new, self.z,
+                                                   self.rho)
         omegas = xs_new + u_new
         if self.codec.method != "none":
             # the codec is stateful per logical slot (delta error
@@ -315,15 +350,29 @@ class Scheduler:
 
     def _master_z_update(self, omega_bar: jnp.ndarray, q_sum: float,
                          n_eff: int, adapt_rho: bool = True):
-        z_new = self.problem.prox_h(omega_bar, 1.0 / (n_eff * self.rho))
         r_norm = float(np.sqrt(q_sum))
         # dual residual: Boyd's consensus form s = rho*sqrt(W)*||dz|| (the
         # stacked-problem dual residual).  The paper's Algorithm 1 prints
         # s = rho*||dz||; we keep Boyd's normalization — it balances the
         # rho-adaptation correctly (the paper-literal form overshoots rho
         # and stalls the dual residual; EXPERIMENTS.md §Paper).
-        s_norm = float(self.rho * jnp.linalg.norm(z_new - self.z)
-                       * np.sqrt(n_eff))
+        lam = getattr(self.problem, "h_l1_lam", None)
+        if (self._kernel_pallas and lam is not None
+                and omega_bar.dtype == jnp.float32):
+            # fused path: z = S(ω̄; lam/(W·rho)), ||dz||² and nnz(z) in one
+            # pass (kernels/soft_threshold).  prox_l1(v, t, lam) IS
+            # soft_threshold(v, lam·t), so this is the same update; f64
+            # paper runs keep the jnp path (the kernel is f32).
+            from repro.kernels import ops
+            thr = float(lam) / (n_eff * self.rho)
+            z_new, ssq, nnz = ops.fused_z_update(omega_bar, self.z, thr)
+            s_norm = float(self.rho * np.sqrt(float(ssq)) * np.sqrt(n_eff))
+            self._z_nnz = int(nnz)
+        else:
+            z_new = self.problem.prox_h(omega_bar, 1.0 / (n_eff * self.rho))
+            s_norm = float(self.rho * jnp.linalg.norm(z_new - self.z)
+                           * np.sqrt(n_eff))
+            self._z_nnz = -1
         self.z_prev, self.z = self.z, z_new
         rho_old = self.rho
         if adapt_rho:
@@ -455,7 +504,8 @@ class Scheduler:
             slowest10=np.array([t >= thresh for t, _ in arrivals]),
             round_wall_s=round_wall,
             t_fanin_wait=master_done - max(t for t, _ in waited),
-            cost_usd=self.meter.total_usd(), n_workers=W)
+            cost_usd=self.meter.total_usd(), n_workers=W,
+            z_nnz=self._z_nnz)
         self.history.append(m)
         return m
 
@@ -540,7 +590,8 @@ class Scheduler:
                                           for i in range(W)]),
                     n_respawns=self.n_respawns,
                     slowest10=np.zeros(W, bool),
-                    cost_usd=self.meter.total_usd(), n_workers=W)
+                    cost_usd=self.meter.total_usd(), n_workers=W,
+                    z_nnz=self._z_nnz)
                 self.history.append(m)
                 if on_round:
                     on_round(m)

@@ -1,0 +1,355 @@
+"""Fused-kernel execution path (SchedulerConfig(kernel="pallas")).
+
+The contract under test, in two halves:
+
+* DIFFERENTIAL — with the Pallas kernels forced into interpret mode
+  (``REPRO_PALLAS=interpret``; bit-accurate CPU emulation of the TPU
+  kernels), a ``kernel="pallas"`` run produces residual/penalty/cost
+  traces ALLCLOSE to the stock ``kernel="xla"`` engine for every
+  registered workload, across barrier modes, both fan-ins, compression,
+  and mid-run ``rescale()`` to a W that divides nothing.
+
+* NO DRIFT — ``kernel="xla"`` (the default) remains byte-identical to
+  the pre-kernel code path: its traces still match the golden traces
+  pinned in ``tests/golden/engine_traces.json`` (recorded before the
+  kernel switch existed).
+
+Property-based half (tests/_hyp): the fused wrappers' padding/masking
+glue — rows padded to the sublane multiple, features to the 128-lane
+multiple, {0,1} row masks including all-zero lanes — must be invisible:
+loss/grad/ssq/nnz computed on the PADDED operands equal the jnp answer
+on the raw unpadded data.
+"""
+import contextlib
+import functools
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # real hypothesis in CI; stub offline
+
+from repro import problems
+from repro.api import ExperimentSpec, build, run
+from repro.core import prox
+from repro.core.admm import AdmmOptions
+from repro.kernels import ops
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
+from test_engine import (GOLDEN_KEYS, GOLDEN_PATH, GOLDEN_RTOL, TRACE_KEYS,
+                         WORKLOADS, _run as _engine_run)
+
+ROUNDS = 6
+W = 8
+
+
+def assert_kernel_traces_allclose(a, b):
+    assert len(a) == len(b)
+    for key in TRACE_KEYS:
+        va = np.array([row[key] for row in a])
+        vb = np.array([row[key] for row in b])
+        if key == "inner_mean":
+            # adaptive FISTA sitting exactly on its eps_grad stopping
+            # threshold can flip a lane by ±1 iteration when the fused
+            # kernel reorders the gradient reduction; allow a couple of
+            # flipped lanes (1/W each), everything else stays tight
+            np.testing.assert_allclose(va, vb, atol=2.0 / 4 + 1e-9,
+                                       err_msg=f"trace key {key!r}")
+        else:
+            np.testing.assert_allclose(va, vb, rtol=1e-4, atol=1e-6,
+                                       err_msg=f"trace key {key!r}")
+
+
+@contextlib.contextmanager
+def _forced_mode(mode: str):
+    """Pin REPRO_PALLAS for the enclosed run (the wrappers re-read the
+    env per dispatch, so no reload is needed)."""
+    old = os.environ.get("REPRO_PALLAS")
+    os.environ["REPRO_PALLAS"] = mode
+    try:
+        yield
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_PALLAS", None)
+        else:
+            os.environ["REPRO_PALLAS"] = old
+
+
+@functools.lru_cache(maxsize=None)
+def _trace(problem: str, kernel: str, mode: str = "sync",
+           fanin: str = "flat", engine: str = "batched",
+           compress: str = "none"):
+    """One cached run per cell (the xla side of every differential pair
+    is shared across parametrizations)."""
+    cfg = SchedulerConfig(n_workers=W, mode=mode, engine=engine,
+                          kernel=kernel, fanin=fanin, compress=compress,
+                          replication=2, admm=AdmmOptions(max_iters=ROUNDS))
+    spec = ExperimentSpec(problem=problem,
+                          problem_kwargs=WORKLOADS[problem],
+                          scheduler=cfg, max_rounds=ROUNDS)
+    with _forced_mode("interpret" if kernel == "pallas" else "ref"):
+        res = run(spec)
+    return res.trace, np.asarray(res.z)
+
+
+# ---------------------------------------------------------------------------
+# the differential matrix: 4 workloads x barrier modes x both fan-ins
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fanin", ["flat", "tree"])
+@pytest.mark.parametrize("mode", ["sync", "replicated"])
+@pytest.mark.parametrize("problem", sorted(WORKLOADS))
+def test_pallas_matches_xla(problem, mode, fanin):
+    tx, zx = _trace(problem, "xla", mode, fanin)
+    tp, zp = _trace(problem, "pallas", mode, fanin)
+    assert_kernel_traces_allclose(tx, tp)
+    # atol absorbs the tail of a ±1 inner-iteration flip (see the trace
+    # helper above) on near-zero coordinates
+    np.testing.assert_allclose(zx, zp, rtol=1e-4, atol=2e-5)
+
+
+def test_pallas_composes_with_compression():
+    tx, _ = _trace("logreg", "xla", "drop_slowest", "tree",
+                   compress="topk")
+    tp, _ = _trace("logreg", "pallas", "drop_slowest", "tree",
+                   compress="topk")
+    assert_kernel_traces_allclose(tx, tp)
+
+
+def test_pallas_with_loop_engine_fuses_z_update_only():
+    """kernel="pallas" composes with engine="loop" too: the worker side
+    stays on the per-worker jitted solves and only the master's z-update
+    fuses — traces must still agree with stock loop/xla."""
+    tx, _ = _trace("logreg", "xla", engine="loop")
+    tp, _ = _trace("logreg", "pallas", engine="loop")
+    assert_kernel_traces_allclose(tx, tp)
+
+
+@pytest.mark.parametrize("problem", ["logreg", "lasso"])
+def test_rescale_restacks_kernel_batches(problem):
+    """Mid-run rescale to W=7 (divides nothing): the dense kernel-batch
+    cache must re-stage alongside the sparse one, staying allclose to
+    the xla engine across the resize."""
+    hist = {}
+    for kernel in ("xla", "pallas"):
+        cfg = SchedulerConfig(n_workers=W, engine="batched", kernel=kernel,
+                              admm=AdmmOptions(max_iters=2 * ROUNDS))
+        _, sched = build(ExperimentSpec(problem=problem,
+                                        problem_kwargs=WORKLOADS[problem],
+                                        scheduler=cfg))
+        with _forced_mode("interpret" if kernel == "pallas" else "ref"):
+            for _ in range(3):
+                sched.run_round()
+            sched.rescale(7)
+            for _ in range(3):
+                sched.run_round()
+        hist[kernel] = sched.history
+    for key in ("r_norm", "s_norm", "rho", "sim_time"):
+        va = np.array([getattr(m, key) for m in hist["xla"]])
+        vb = np.array([getattr(m, key) for m in hist["pallas"]])
+        np.testing.assert_allclose(va, vb, rtol=1e-4, atol=1e-6,
+                                   err_msg=f"history key {key!r}")
+
+
+# ---------------------------------------------------------------------------
+# no drift: kernel="xla" still reproduces the pre-kernel golden traces
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["loop", "batched"])
+@pytest.mark.parametrize("problem", sorted(WORKLOADS))
+def test_xla_kernel_stays_golden(problem, engine):
+    """The default kernel is the OLD code path, not a near-copy: its
+    traces must still match tests/golden/engine_traces.json, which was
+    pinned before SchedulerConfig(kernel=...) existed (same instances
+    and config as test_engine's golden tests, kernel passed explicitly)."""
+    import json
+    golden = json.loads(GOLDEN_PATH.read_text())
+    want = golden[problem][f"{engine}/flat"]
+    res = _engine_run(problem, engine, "sync", fanin="flat", kernel="xla")
+    rtol = GOLDEN_RTOL[engine]
+    for key in GOLDEN_KEYS:
+        got = [float(row[key]) for row in res.trace]
+        np.testing.assert_allclose(
+            got, want[key], rtol=rtol, atol=1e-9,
+            err_msg=f"{problem} {engine} trace key {key!r}")
+
+
+def test_default_kernel_is_xla():
+    assert SchedulerConfig().kernel == "xla"
+
+
+def test_unknown_kernel_rejected():
+    with pytest.raises(ValueError, match="kernel"):
+        Scheduler(problems.make("lasso", **WORKLOADS["lasso"]),
+                  SchedulerConfig(n_workers=2, kernel="cuda"))
+
+
+def test_pallas_kernel_needs_problem_support():
+    class LegacyBatched:
+        """A third-party problem with the PRE-kernel solve_all signature:
+        engine='batched' must keep working, kernel='pallas' must refuse
+        up front instead of exploding on an unexpected kwarg."""
+        n_features = 4
+        dtype = jnp.float32
+
+        def n_samples(self, wid, n_workers):
+            return 1
+
+        def solve(self, wid, n_workers, x0, z, u, rho):
+            return x0, 1
+
+        def solve_all(self, xs, us, z, rho):
+            return xs, np.ones(xs.shape[0], np.int64)
+
+        def supports_batched(self):
+            return True
+
+        def prox_h(self, v, t):
+            return v
+
+    p = LegacyBatched()
+    Scheduler(p, SchedulerConfig(n_workers=2, engine="batched"))
+    Scheduler(p, SchedulerConfig(n_workers=2, engine="loop",
+                                 kernel="pallas"))
+    with pytest.raises(ValueError, match="supports_kernel"):
+        Scheduler(p, SchedulerConfig(n_workers=2, engine="batched",
+                                     kernel="pallas"))
+
+
+def test_kernel_rides_spec_roundtrip():
+    spec = ExperimentSpec(problem="lasso",
+                          scheduler=SchedulerConfig(kernel="pallas"))
+    assert spec.to_dict()["scheduler"]["kernel"] == "pallas"
+
+
+def test_z_nnz_telemetry():
+    """The fused z-update reports nnz(z) for free; the jnp path reports
+    the -1 sentinel.  The last round's count must equal the actual
+    sparsity of the returned solution."""
+    tp, zp = _trace("logreg", "pallas")
+    tx, _ = _trace("logreg", "xla")
+    assert all(row["z_nnz"] == -1 for row in tx)
+    assert all(row["z_nnz"] >= 0 for row in tp)
+    assert tp[-1]["z_nnz"] == int(np.count_nonzero(zp))
+
+
+# ---------------------------------------------------------------------------
+# property-based padding/masking: no leakage through the fused wrappers
+# ---------------------------------------------------------------------------
+
+seeds = st.integers(0, 10_000)
+odd_n = st.integers(1, 30)        # rows: almost never a sublane multiple
+odd_d = st.integers(1, 20)        # features: never a 128-lane multiple
+
+
+def _margin_oracle(A, b, mask, x, kind, gamma):
+    """Loss/grad on the RAW unpadded operands, straight jnp."""
+    m = np.asarray(A) @ np.asarray(x)
+    if kind == "logistic":
+        neg = -np.asarray(b) * m
+        val = np.logaddexp(0.0, neg)
+        dldax = -np.asarray(b) / (1.0 + np.exp(-neg))
+    else:
+        mm = np.asarray(b) * m
+        val = np.where(mm >= 1.0, 0.0,
+                       np.where(mm <= 1.0 - gamma, 1.0 - mm - gamma / 2,
+                                (1.0 - mm) ** 2 / (2 * gamma)))
+        dldm = np.where(mm >= 1.0, 0.0,
+                        np.where(mm <= 1.0 - gamma, -1.0,
+                                 -(1.0 - mm) / gamma))
+        dldax = dldm * np.asarray(b)
+    c = np.asarray(mask) * dldax
+    return float(np.sum(np.asarray(mask) * val)), c @ np.asarray(A)
+
+
+@pytest.mark.parametrize("kind", ["logistic", "hinge"])
+@given(seeds, odd_n, odd_d)
+@settings(max_examples=8, deadline=None)
+def test_fused_margin_padding_invisible(kind, seed, n, d):
+    rng = np.random.RandomState(seed)
+    A = jnp.asarray(rng.randn(n, d) * 0.4, jnp.float32)
+    b = jnp.asarray(np.where(rng.randn(n) >= 0, 1.0, -1.0), jnp.float32)
+    x = jnp.asarray(rng.randn(d) * 0.2, jnp.float32)
+    # random {0,1} row mask, sometimes all-zero (a fully-padded lane)
+    mask = jnp.asarray((rng.rand(n) < 0.7).astype(np.float32))
+    if seed % 5 == 0:
+        mask = jnp.zeros((n,), jnp.float32)
+    with _forced_mode("interpret"):
+        if kind == "logistic":
+            f, g = ops.fused_logistic_vjp(A, b, x, mask=mask)
+        else:
+            f, g = ops.fused_svm_vjp(A, b, x, gamma=0.5, mask=mask)
+    f_r, g_r = _margin_oracle(A, b, mask, x, kind, 0.5)
+    np.testing.assert_allclose(float(f), f_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), g_r, rtol=1e-3, atol=1e-4)
+
+
+@given(seeds, st.integers(2, 4), odd_n, odd_d)
+@settings(max_examples=6, deadline=None)
+def test_fused_margin_batched_lanes_independent(seed, w, n, d):
+    """Leading worker axis: each lane's (loss, grad) equals its own
+    single-lane call — including a deliberately all-zero lane 0."""
+    rng = np.random.RandomState(seed)
+    A = jnp.asarray(rng.randn(w, n, d) * 0.4, jnp.float32)
+    b = jnp.asarray(np.where(rng.randn(w, n) >= 0, 1.0, -1.0), jnp.float32)
+    x = jnp.asarray(rng.randn(w, d) * 0.2, jnp.float32)
+    mask = jnp.asarray((rng.rand(w, n) < 0.8).astype(np.float32))
+    mask = mask.at[0].set(0.0)
+    with _forced_mode("interpret"):
+        f, g = ops.fused_logistic_vjp(A, b, x, mask=mask)
+        assert f.shape == (w,) and g.shape == (w, d)
+        for lane in range(w):
+            f1, g1 = ops.fused_logistic_vjp(A[lane], b[lane], x[lane],
+                                            mask=mask[lane])
+            np.testing.assert_allclose(float(f[lane]), float(f1),
+                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(g[lane]), np.asarray(g1),
+                                       rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(float(f[0]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(g[0]), 0.0, atol=1e-6)
+
+
+@given(seeds, odd_n, st.integers(1, 12), st.integers(2, 5))
+@settings(max_examples=6, deadline=None)
+def test_fused_softmax_padding_invisible(seed, n, d, C):
+    rng = np.random.RandomState(seed)
+    A = jnp.asarray(rng.randn(n, d) * 0.4, jnp.float32)
+    y = jnp.asarray(rng.randint(0, C, n), jnp.int32)
+    X = rng.randn(d, C).astype(np.float32) * 0.2
+    mask = jnp.asarray((rng.rand(n) < 0.7).astype(np.float32))
+    with _forced_mode("interpret"):
+        f, g = ops.fused_softmax_vjp(A, y, jnp.asarray(X.reshape(-1)),
+                                     n_classes=C, mask=mask)
+    logits = np.asarray(A) @ X
+    lse = np.log(np.exp(logits - logits.max(1, keepdims=True))
+                 .sum(1)) + logits.max(1)
+    mk = np.asarray(mask)
+    f_r = float(np.sum(mk * (lse - logits[np.arange(n), np.asarray(y)])))
+    sm = np.exp(logits - logits.max(1, keepdims=True))
+    sm /= sm.sum(1, keepdims=True)
+    onehot = np.eye(C, dtype=np.float32)[np.asarray(y)]
+    g_r = (np.asarray(A).T @ (mk[:, None] * (sm - onehot))).reshape(-1)
+    np.testing.assert_allclose(float(f), f_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), g_r, rtol=1e-3, atol=1e-4)
+
+
+@given(seeds, st.integers(1, 300), st.floats(1e-3, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_fused_z_update_padding_invisible(seed, d, thr):
+    """Lane-padding the decision vector must not leak into z/ssq/nnz —
+    in particular nnz counts ONLY real coordinates (padded lanes
+    soft-threshold to exactly 0)."""
+    rng = np.random.RandomState(seed)
+    omega = jnp.asarray(rng.randn(d), jnp.float32)
+    z_old = jnp.asarray(rng.randn(d), jnp.float32)
+    with _forced_mode("interpret"):
+        z_new, ssq, nnz = ops.fused_z_update(omega, z_old, thr)
+    want = prox.soft_threshold(omega, jnp.float32(thr))
+    np.testing.assert_allclose(np.asarray(z_new), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(ssq),
+                               float(jnp.sum((want - z_old) ** 2)),
+                               rtol=1e-4, atol=1e-6)
+    assert int(nnz) == int(np.count_nonzero(np.asarray(want)))
+    assert int(nnz) <= d

@@ -66,12 +66,88 @@ def test_ops_wrapper_matches_data_oracle(rng, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# REPRO_PALLAS dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_mode_dispatch_all_values(monkeypatch):
+    """Every recognized REPRO_PALLAS value dispatches verbatim; empty
+    falls back to the backend default; anything else RAISES (a typo must
+    not silently run the jnp oracle while claiming kernel coverage)."""
+    from repro.kernels import ops
+    for value in ("ref", "interpret", "pallas"):
+        monkeypatch.setenv("REPRO_PALLAS", value)
+        assert ops._mode() == value
+    monkeypatch.delenv("REPRO_PALLAS")
+    assert ops._mode() == (
+        "pallas" if jax.default_backend() == "tpu" else "ref")
+    monkeypatch.setenv("REPRO_PALLAS", "interperet")   # the classic typo
+    with pytest.raises(ValueError, match="interperet"):
+        ops._mode()
+
+
+# ---------------------------------------------------------------------------
+# svm_vjp (smoothed hinge)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,gamma", [(256, 128, 0.5), (512, 128, 0.2)])
+def test_svm_vjp_sweep(rng, n, d, gamma):
+    a = _rand(rng, (n, d), scale=0.3)
+    b = jnp.asarray(np.sign(rng.randn(n, 1)), jnp.float32)
+    mask = jnp.zeros((n, 1), jnp.float32).at[:n - 37].set(1.0)
+    x = _rand(rng, (1, d), scale=0.1)
+    loss_k, grad_k = lv_k.svm_vjp_pallas(a, b, mask, x, gamma=gamma,
+                                         block_rows=256, interpret=True)
+    loss_r, grad_r = ref.svm_vjp_ref(a, b, mask, x, gamma)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=2e-5)
+    np.testing.assert_allclose(grad_k, grad_r, rtol=2e-4, atol=2e-4)
+
+
+def test_svm_ref_matches_problem_loss(rng):
+    """The kernel oracle IS problems/svm.py's smoothed hinge: dense ref
+    vs the problem's sparse gather-format loss on the same data."""
+    from repro.problems import base as pbase
+    from repro.problems.svm import SVMProblem
+    p = SVMProblem(n_samples=40, n_features=16, seed=3)
+    idx, vals, b = p._shard(0, 2)
+    n = idx.shape[0]
+    A = pbase.densify_sparse_rows(idx, vals, 16)
+    x = _rand(rng, (16,), scale=0.2)
+    f_sparse, g_sparse = p._loss_value_and_grad((idx, vals, b))(x)
+    f_ref, g_ref = ref.svm_vjp_ref(jnp.asarray(A), b[:, None],
+                                   jnp.ones((n, 1)), x[None, :],
+                                   p.smoothing)
+    np.testing.assert_allclose(float(f_ref[0, 0]), float(f_sparse),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_ref[0]), np.asarray(g_sparse),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_ref_matches_problem_loss(rng):
+    """softmax_vjp_ref vs problems/softmax.py's loss on a real shard."""
+    from repro.problems.softmax import SoftmaxProblem
+    p = SoftmaxProblem(n_samples=30, n_features=8, n_classes=3, seed=1)
+    A, y = p._shard(0, 2)
+    x = _rand(rng, (8 * 3,), scale=0.2)
+    f_prob, g_prob = p._loss_value_and_grad((A, y))(x)
+    f_ref, g_ref = ref.softmax_vjp_ref(A, y, jnp.ones((A.shape[0], 1)),
+                                       x.reshape(8, 3))
+    np.testing.assert_allclose(float(f_ref[0, 0]), float(f_prob), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_ref).reshape(-1),
+                               np.asarray(g_prob), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # soft_threshold
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("d", [128, 512, 1024])
+@pytest.mark.parametrize("d", [128, 512, 1024, 8320])
 def test_soft_threshold_sweep(rng, d):
+    # 8320 > the 8192 default block but is NOT a multiple of it — the
+    # regression shape for _pick_block (the naive min(block, D) tiling
+    # asserted out on exactly this case)
     omega = _rand(rng, (1, d))
     z_old = _rand(rng, (1, d))
     thr = jnp.asarray([[0.37]], jnp.float32)
@@ -79,6 +155,15 @@ def test_soft_threshold_sweep(rng, d):
     out_r = ref.soft_threshold_ref(omega, z_old, thr)
     for k_arr, r_arr in zip(out_k, out_r):
         np.testing.assert_allclose(k_arr, r_arr, rtol=1e-5, atol=1e-6)
+
+
+def test_soft_threshold_pick_block():
+    assert st_k._pick_block(8192, 8192) == 8192
+    assert st_k._pick_block(256, 8192) == 256
+    # 8320 = 128 * 65: its largest 128-multiple divisor <= 8192 is 1664
+    assert st_k._pick_block(8320, 8192) == 1664
+    blk = st_k._pick_block(8320, 8192)
+    assert 8320 % blk == 0 and blk % 128 == 0 and blk <= 8192
 
 
 # ---------------------------------------------------------------------------
