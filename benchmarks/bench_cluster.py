@@ -91,7 +91,8 @@ def run_cluster(probs, *, policy: str, shared: bool) -> Cluster:
 
 def report_row(label, rep):
     print(f"  {label:22s} p50={rep.p50_latency_s:6.2f}s "
-          f"p95={rep.p95_latency_s:6.2f}s warm={rep.warm_hit_rate:5.1%} "
+          f"p95={rep.p95_latency_s:6.2f}s p99={rep.p99_latency_s:6.2f}s "
+          f"warm={rep.warm_hit_rate:5.1%} "
           f"cost=${rep.total_cost_usd:.4f} "
           f"fairness(max/min slowdown)={rep.fairness_ratio:.2f}")
 

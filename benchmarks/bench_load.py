@@ -1,0 +1,171 @@
+"""Production load: a 10k-job Azure-model trace against the cluster.
+
+``bench_cluster`` proves the multi-tenant story at 16 hand-arranged
+jobs; this benchmark proves the SCALE story: a trace-driven workload
+(``runtime/loadgen.py`` — diurnal arrival curve, heavy-tailed
+durations, Zipf tenant mix) replayed through the event-heap cluster
+engine, 10k+ jobs over simulated hours, in single-digit wall minutes.
+
+Reported per run (and emitted to experiments/bench_load.json):
+
+* **SLO attainment** — fraction of completed jobs inside their
+  deadline, plus p50/p95/p99 latency vs the deadline distribution;
+* **warm-hit rate** — how well the shared keep-alive pool amortizes
+  across tenants at production arrival rates;
+* **$/job** — the economics headline normalized per completed job.
+
+Every template pins ``fixed_inner`` + ADMM eps at 1e-12, so no job
+converges before its ``max_rounds``: round counts (hence completion
+counts, admission order, and every queue decision) are pure functions
+of the trace — structural, not float-sensitive — which is what makes
+the smoke anchor pinnable at rtol=0 in ``baselines.json``.
+
+Modes:
+  --smoke   ~1k jobs, Poisson model (the CI step: seconds-to-a-minute;
+            its metrics are the regression-gate anchor)
+  (default) 10k jobs, Azure diurnal model over 8 simulated hours
+"""
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro import api
+from repro.runtime.autoscale import ClusterAutoscaleConfig
+from repro.runtime.cluster import Cluster, ClusterConfig
+from repro.runtime.loadgen import LoadSpec, generate
+
+# Never-converging ADMM keeps round counts structural (see module doc);
+# fixed_inner keeps the inner solve a fixed 6 iterations — cheap and
+# iteration-count-deterministic.  Each template's pool override scales
+# SIMULATED per-iteration time so one round spans ~est_round_s of model
+# seconds (6 iters x t_inner_floor_s ~= est_round_s): trace durations
+# then live on the cluster clock and congestion/SLO pressure are real,
+# at zero extra wall cost.  With duration_median_s=20 jobs center near
+# ~5 rounds, which keeps 10k jobs inside single-digit wall minutes.
+_NOCONV = dict(eps_primal=1e-12, eps_dual=1e-12)
+TEMPLATES = {
+    # lasso's per-round x-solve is the closed-form direct update (one
+    # "inner iteration"), so its round wall ~= t_inner_floor_s; logreg
+    # runs fixed_inner=6 FISTA iterations, so wall ~= 6 x floor
+    "lasso_s": dict(problem="lasso",
+                    problem_kwargs=dict(n_samples=256, n_features=24),
+                    est_round_s=4.0, admm=_NOCONV,
+                    pool=dict(t_inner_floor_s=3.95)),
+    "lasso_m": dict(problem="lasso",
+                    problem_kwargs=dict(n_samples=512, n_features=32),
+                    est_round_s=6.0, admm=_NOCONV,
+                    pool=dict(t_inner_floor_s=5.9)),
+    "logreg_s": dict(problem="logreg",
+                     problem_kwargs=dict(n_samples=256, n_features=24,
+                                         density=0.1, lam1=0.3,
+                                         fixed_inner=6),
+                     est_round_s=5.0, admm=_NOCONV,
+                     pool=dict(t_inner_floor_s=0.82)),
+}
+
+SMOKE_SPEC = LoadSpec(
+    model="poisson", jobs=1000, horizon_s=3000.0, seed=42,
+    rate_per_min=20.0, rounds_min=2, rounds_max=16,
+    duration_median_s=20.0, templates=tuple(sorted(TEMPLATES)),
+    n_tenants=8, slo_slack=2.0, deadline_floor_s=10.0)
+
+FULL_SPEC = LoadSpec(
+    model="azure", jobs=10_000, horizon_s=8 * 3600.0, seed=42,
+    rate_per_min=21.0, rounds_min=2, rounds_max=24,
+    duration_median_s=20.0, templates=tuple(sorted(TEMPLATES)),
+    n_tenants=16, slo_slack=2.0, deadline_floor_s=10.0)
+
+# Sized so the diurnal PEAK outruns capacity (queueing, SLO misses at
+# the peak) while the mean load fits — the regime production operators
+# actually run in.  The full run also exercises the cluster autoscaler
+# on periodic ticks (ClusterAutoscaleConfig.tick_s, heap engine).
+SMOKE_CLUSTER = dict(policy="fair_share", max_concurrent_jobs=12,
+                     max_active_workers=40, engine="heap")
+FULL_CLUSTER = dict(policy="fair_share", max_concurrent_jobs=16,
+                    max_active_workers=56, engine="heap",
+                    autoscale=ClusterAutoscaleConfig(
+                        policy="queue_depth", min_workers=32,
+                        max_workers=56, grow_at_depth=4,
+                        cooldown_events=4, tick_s=60.0))
+
+
+def slo_metrics(result) -> dict:
+    """The headline block: attainment + latency percentiles + $/job."""
+    done = [j for j in result.jobs if j.state == "done"]
+    lats = np.array([j.latency_s for j in done])
+    rep = result.report
+    return {
+        "n_done": len(done),
+        "n_rejected": rep.n_rejected,
+        "total_rounds": int(sum(j.rounds for j in done)),
+        "makespan_s": rep.makespan_s,
+        "slo_attainment": rep.deadline_attainment,
+        "p50_latency_s": float(np.percentile(lats, 50)),
+        "p95_latency_s": float(np.percentile(lats, 95)),
+        "p99_latency_s": float(np.percentile(lats, 99)),
+        "warm_hit_rate": rep.warm_hit_rate,
+        "total_cost_usd": rep.total_cost_usd,
+        "cost_per_job_usd": rep.total_cost_usd / max(len(done), 1),
+        "fairness_ratio": rep.fairness_ratio,
+    }
+
+
+def run_trace(spec: LoadSpec, cluster_kw: dict, *,
+              progress_every: int = 2000):
+    wl = generate(spec, templates=TEMPLATES)
+    sanity = wl.compare_to_model()
+    print(f"[bench_load] trace: {len(wl)} jobs / {spec.model} model / "
+          f"{spec.horizon_s / 3600.0:.0f}h horizon — sanity "
+          f"{'OK' if sanity['ok'] else 'MISMATCH'} "
+          f"(rate {sanity['rate']['empirical_per_min']:.1f}/min, "
+          f"p99/p50 duration "
+          f"{sanity['duration']['heavy_tail_p99_over_p50']:.1f}x, "
+          f"top tenant {sanity['tenants']['top_share']:.0%})")
+    t0 = time.time()
+    result = api.replay(wl, cluster=Cluster(ClusterConfig(**cluster_kw)),
+                        progress_every=progress_every)
+    wall = time.time() - t0
+    m = slo_metrics(result)
+    m["wall_s"] = wall
+    print(f"[bench_load] {m['n_done']} done / {m['total_rounds']} rounds "
+          f"in {wall:.0f}s wall "
+          f"({1000.0 * wall / max(m['total_rounds'], 1):.1f} ms/round)")
+    print(f"[bench_load]   SLO attainment {m['slo_attainment']:.1%}  "
+          f"p50={m['p50_latency_s']:.1f}s p95={m['p95_latency_s']:.1f}s "
+          f"p99={m['p99_latency_s']:.1f}s")
+    print(f"[bench_load]   warm={m['warm_hit_rate']:.1%}  "
+          f"$/job={m['cost_per_job_usd']:.5f}  "
+          f"fairness={m['fairness_ratio']:.2f}")
+    return m, sanity
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="~1k-job Poisson trace (the CI anchor run)")
+    args = ap.parse_args(argv)
+    spec = SMOKE_SPEC if args.smoke else FULL_SPEC
+    cluster_kw = SMOKE_CLUSTER if args.smoke else FULL_CLUSTER
+    mode = "smoke" if args.smoke else "full"
+
+    metrics, sanity = run_trace(
+        spec, cluster_kw, progress_every=500 if args.smoke else 2000)
+
+    checks = {
+        "trace_matches_model": bool(sanity["ok"]),
+        "all_jobs_completed": metrics["n_done"] + metrics["n_rejected"]
+        == (spec.jobs or 0) or spec.jobs is None,
+        "slo_attainment_reported": metrics["slo_attainment"] is not None,
+    }
+    emit("bench_load", {"mode": mode, "spec_model": spec.model,
+                        "n_jobs": spec.jobs, mode: metrics,
+                        "sanity": sanity, "checks": checks})
+    if not all(checks.values()):
+        raise SystemExit(f"bench_load acceptance checks FAILED: {checks}")
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

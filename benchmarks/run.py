@@ -25,9 +25,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_admm_vs_sgd, bench_cluster,
                             bench_compression, bench_cost, bench_kernels,
-                            bench_scale, bench_workloads, fig3_convergence,
-                            fig4_speedup, fig67_histograms, fig8_coldstart,
-                            roofline)
+                            bench_load, bench_scale, bench_workloads,
+                            fig3_convergence, fig4_speedup,
+                            fig67_histograms, fig8_coldstart, roofline)
 
     jobs = [
         ("kernels", lambda: bench_kernels.main()),
@@ -38,6 +38,10 @@ def main(argv=None) -> None:
         ("compression", lambda: bench_compression.main()),
         ("bench_cost", lambda: bench_cost.main()),
         ("bench_cluster", lambda: bench_cluster.main()),
+        # the default pass runs the ~1k-job smoke trace; --paper replays
+        # the full 10k-job Azure-model trace (minutes, not seconds)
+        ("bench_load", lambda: bench_load.main(
+            None if args.paper else ["--smoke"])),
         ("bench_workloads", lambda: bench_workloads.main()),
         ("bench_scale", lambda: bench_scale.main()),
         ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),

@@ -12,6 +12,12 @@ from repro.runtime.cluster import (
     ClusterResult,
     Job,
 )
+from repro.runtime.loadgen import (
+    LoadSpec,
+    TraceJob,
+    TraceWorkload,
+    generate,
+)
 from repro.runtime.pool import LambdaPool, PoolConfig, SimWorker
 from repro.runtime.provider import Provider, ProviderConfig, WarmContainer
 from repro.runtime.reduce import TreeConfig, fanin_drain, tree_drain
@@ -31,4 +37,5 @@ __all__ = [
     "AutoscaleConfig", "Autoscaler",
     "ClusterAutoscaleConfig", "ClusterAutoscaler",
     "Cluster", "ClusterConfig", "ClusterReport", "ClusterResult", "Job",
+    "LoadSpec", "TraceJob", "TraceWorkload", "generate",
 ]

@@ -152,6 +152,12 @@ class ClusterAutoscaleConfig:
     grow_at_depth: int = 2        # queued jobs that trigger growth
     shrink_at_depth: int = 0      # queue depth at/below which to shrink
     cooldown_events: int = 4      # min observations between resizes
+    tick_s: float = 0.0           # heap engine: observe on periodic sim-time
+    #                               ticks instead of after every job round
+    #                               (0 = legacy per-round observation; the
+    #                               cooldown then counts ticks, making the
+    #                               control cadence independent of how many
+    #                               rounds the cluster packs into a second)
 
     def __post_init__(self):
         if self.policy not in CLUSTER_POLICIES:

@@ -24,6 +24,15 @@ def test_run_list_prints_names_and_exits_zero(capsys):
     assert "bench_scale" in names
     assert "fig8_coldstart" in names
     assert "bench_workloads" in names
+    assert "bench_load" in names
+
+
+def test_run_only_bench_load_is_registered():
+    """--only accepts bench_load (the argparse unknown-name error would
+    exit 2 before any benchmark runs)."""
+    with pytest.raises(SystemExit) as ei:
+        bench_run.main(["--only", "bench_load,definitely_not_a_bench"])
+    assert ei.value.code == 2                        # unknown peer rejected
 
 
 def test_run_only_unknown_name_exits_two(capsys):

@@ -1,0 +1,280 @@
+"""Event-heap cluster engine (ClusterConfig.engine="heap").
+
+The contract under test is DIFFERENTIAL: the heap engine is an O(log
+jobs) reimplementation of the original O(jobs)-per-round scan loop and
+must reproduce it byte-for-byte — same admissions in the same order,
+same autoscaler observation cadence, same ``ClusterReport`` down to the
+float.  The scan engine stays in-tree exactly so these tests can pin
+heap == scan on a bench_cluster-style contended mix across all four
+policies, with and without the cluster autoscaler.
+
+Plus the heap's own invariants: pops leave the run heap in
+nondecreasing sim-time order (the frontier clock never moves backward),
+reruns are deterministic, and ``tick_s > 0`` switches the autoscaler to
+periodic sim-time ticks without losing jobs.
+"""
+import heapq
+
+import numpy as np
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+from repro import api, problems
+from repro.api import ExperimentSpec
+from repro.core.admm import AdmmOptions
+from repro.runtime import (Cluster, ClusterAutoscaleConfig, ClusterConfig,
+                           PoolConfig, ProviderConfig, SchedulerConfig)
+from repro.runtime.cluster import ENGINES
+from repro.runtime.loadgen import LoadSpec, generate
+
+KW = dict(n_samples=256, n_features=32)
+
+
+def _spec(seed, *, w=4, rounds=3, label=""):
+    return ExperimentSpec(
+        problem="lasso", problem_kwargs=KW,
+        scheduler=SchedulerConfig(
+            n_workers=w, replication=2,
+            admm=AdmmOptions(max_iters=rounds),
+            pool=PoolConfig(seed=seed, provider=ProviderConfig())),
+        max_rounds=rounds, label=label or f"job{seed}")
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    return problems.make("lasso", **KW)
+
+
+def _submit_mix(c: Cluster, problem):
+    """A contended 16-job / 4-tenant mix: staggered arrivals, mixed
+    fleet sizes (so capacity skips exercise the stash-and-restore
+    path), varied priorities and deadlines (so every policy orders the
+    queue differently)."""
+    tenants = ("alice", "bob", "carol", "dave")
+    for i in range(16):
+        c.submit(_spec(seed=100 + i, w=4 if i % 3 == 0 else 2),
+                 tenant=tenants[i % 4],
+                 priority=(i * 5) % 7,
+                 deadline_s=40.0 + (i * 13) % 60,
+                 at=float((i * 7) % 40),
+                 problem=problem)
+
+
+def _run(engine, problem, *, policy="fifo", autoscale=None, tick_s=0.0,
+         spy=None):
+    kw = dict(engine=engine, policy=policy, max_concurrent_jobs=3,
+              max_active_workers=10)
+    if autoscale:
+        kw["autoscale"] = ClusterAutoscaleConfig(
+            policy="queue_depth", min_workers=6, max_workers=10,
+            grow_at_depth=2, cooldown_events=2, tick_s=tick_s)
+    c = Cluster(ClusterConfig(**kw))
+    if spy is not None:
+        spy(c)
+    _submit_mix(c, problem)
+    res = c.run_all()
+    return c, res
+
+
+def _fingerprint(res):
+    return (res.report.to_dict(),
+            [j.summary() for j in sorted(res.jobs, key=lambda j: j.job_id)])
+
+
+# ---------------------------------------------------------------------------
+# heap == scan, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy",
+                         ["fifo", "priority", "deadline", "fair_share"])
+def test_heap_matches_scan_all_policies(lasso, policy):
+    _, heap_res = _run("heap", lasso, policy=policy)
+    _, scan_res = _run("scan", lasso, policy=policy)
+    assert _fingerprint(heap_res) == _fingerprint(scan_res)
+
+
+@pytest.mark.parametrize("policy", ["fifo", "fair_share"])
+def test_heap_matches_scan_with_autoscaler(lasso, policy):
+    """tick_s=0 keeps the legacy per-round observation cadence — the
+    autoscaler's per-call counters (cooldown) make cadence observable,
+    so equality here pins the cadence too."""
+    ch, heap_res = _run("heap", lasso, policy=policy, autoscale=True)
+    cs, scan_res = _run("scan", lasso, policy=policy, autoscale=True)
+    assert _fingerprint(heap_res) == _fingerprint(scan_res)
+    assert ch.autoscaler.decisions == cs.autoscaler.decisions
+    assert ch.worker_cap == cs.worker_cap
+
+
+def test_heap_is_the_default_engine():
+    assert ClusterConfig().engine == "heap"
+    assert set(ENGINES) == {"heap", "scan"}
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="engine"):
+        ClusterConfig(engine="quantum")
+
+
+def test_report_carries_p99_and_attainment(lasso):
+    _, res = _run("heap", lasso, policy="deadline")
+    rep = res.report
+    assert rep.p99_latency_s >= rep.p95_latency_s >= rep.p50_latency_s
+    assert rep.deadline_attainment is not None
+    assert 0.0 <= rep.deadline_attainment <= 1.0
+    d = rep.to_dict()
+    assert "p99_latency_s" in d and "deadline_attainment" in d
+
+
+# ---------------------------------------------------------------------------
+# heap-engine invariants
+# ---------------------------------------------------------------------------
+
+
+def _step_spy(record):
+    """Wrap ``c._dispatch`` so every dispatched scheduler's ``step`` is
+    shimmed to record its PRE-step sim clock — i.e. the key the run heap
+    popped it at."""
+    def install(c):
+        orig_dispatch = c._dispatch
+
+        def spy(job, at):
+            orig_dispatch(job, at)
+            orig_step = job.scheduler.step
+
+            def stepped(_job=job, _orig=orig_step):
+                record.append((_job.scheduler.sim_time, _job.job_id))
+                return _orig()
+            job.scheduler.step = stepped
+        c._dispatch = spy
+    return install
+
+
+def test_pop_order_is_nondecreasing_sim_time(lasso):
+    """Every pop takes the globally trailing job: the sequence of
+    pre-step sim clocks never decreases (newly admitted jobs start at or
+    after the instant that admitted them), so the frontier clock is
+    monotone."""
+    pops = []
+    _run("heap", lasso, policy="fair_share", spy=_step_spy(pops))
+    assert len(pops) == 16 * 3                  # every job ran max_rounds
+    times = [t for t, _ in pops]
+    assert all(a <= b for a, b in zip(times, times[1:]))
+
+
+def test_scan_pops_identical_sequence(lasso):
+    """Not just the same reports: both engines step the SAME job at the
+    SAME sim instant, round for round."""
+    hp, sp = [], []
+    _run("heap", lasso, policy="priority", spy=_step_spy(hp))
+    _run("scan", lasso, policy="priority", spy=_step_spy(sp))
+    assert hp == sp
+
+
+def test_heap_rerun_is_deterministic(lasso):
+    a = _fingerprint(_run("heap", lasso, policy="fair_share")[1])
+    b = _fingerprint(_run("heap", lasso, policy="fair_share")[1])
+    assert a == b
+
+
+def test_run_all_is_single_shot(lasso):
+    c, _ = _run("heap", lasso)
+    with pytest.raises(RuntimeError, match="already ran"):
+        c.run_all()
+
+
+def test_tick_mode_runs_autoscaler_on_sim_time(lasso):
+    """tick_s > 0: autoscaler observations land on the periodic grid
+    (decoupled from round cadence) and every job still completes."""
+    c, res = _run("heap", lasso, autoscale=True, tick_s=25.0)
+    assert all(j.state == "done" for j in res.jobs)
+    assert c.autoscaler._event > 0              # ticks were observed
+    c0, res0 = _run("heap", lasso, autoscale=True, tick_s=0.0)
+    assert all(j.state == "done" for j in res0.jobs)
+    # per-round cadence observes far more often than a 25s grid
+    assert c0.autoscaler._event > c.autoscaler._event
+
+
+# ---------------------------------------------------------------------------
+# loadgen replay: the integration seam
+# ---------------------------------------------------------------------------
+
+_TINY_TEMPLATES = {
+    "tiny": dict(problem="lasso",
+                 problem_kwargs=dict(n_samples=64, n_features=8),
+                 est_round_s=8.0,
+                 admm=dict(eps_primal=1e-12, eps_dual=1e-12),
+                 pool=dict(t_inner_floor_s=7.9)),
+}
+
+
+def _tiny_trace(n=24):
+    return generate(LoadSpec(model="poisson", jobs=n, horizon_s=900.0,
+                             seed=11, rate_per_min=2.0, rounds_min=1,
+                             rounds_max=3, templates=("tiny",),
+                             fleet_choices=(2, 4), fleet_weights=(.6, .4),
+                             n_tenants=3, slo_slack=3.0,
+                             deadline_floor_s=20.0),
+                    templates=_TINY_TEMPLATES)
+
+
+def test_replay_heap_matches_scan():
+    wl = _tiny_trace()
+    fps = []
+    for engine in ENGINES:
+        res = api.replay(wl, cluster=Cluster(ClusterConfig(
+            engine=engine, policy="fair_share", max_concurrent_jobs=4,
+            max_active_workers=12)))
+        fps.append(_fingerprint(res))
+    assert fps[0] == fps[1]
+
+
+def test_replay_completes_and_reports(capsys):
+    wl = _tiny_trace(n=12)
+    done = []
+    res = api.replay(wl, on_job_done=done.append, progress_every=5)
+    assert len(done) == 12
+    assert all(j.state == "done" for j in res.jobs)
+    assert res.report.deadline_attainment is not None
+    assert "[replay] 5/12" in capsys.readouterr().out
+
+
+def test_submit_at_helper():
+    job_spec = _spec(1, rounds=1)
+    c = Cluster(ClusterConfig())
+    job = api.submit_at(job_spec, 42.0, cluster=c)
+    assert job.submit_at == 42.0
+
+
+# ---------------------------------------------------------------------------
+# property: heap == scan under random arrival batches (cheap, no JAX —
+# the schedulers are real but tiny, 1-round jobs)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(min_value=0, max_value=50),
+                min_size=2, max_size=6),
+       st.sampled_from(["fifo", "priority", "deadline", "fair_share"]))
+@settings(max_examples=5, deadline=None)
+def test_heap_matches_scan_random_batches(seeds, policy):
+    prob = problems.make("lasso", n_samples=64, n_features=8)
+    fps = []
+    for engine in ENGINES:
+        c = Cluster(ClusterConfig(engine=engine, policy=policy,
+                                  max_concurrent_jobs=2,
+                                  max_active_workers=6))
+        for i, s in enumerate(seeds):
+            c.submit(ExperimentSpec(
+                problem="lasso",
+                problem_kwargs=dict(n_samples=64, n_features=8),
+                scheduler=SchedulerConfig(
+                    n_workers=2 + 2 * (s % 2), replication=2,
+                    admm=AdmmOptions(max_iters=1),
+                    pool=PoolConfig(seed=s,
+                                    provider=ProviderConfig())),
+                max_rounds=1, label=f"r{i}"),
+                tenant=f"t{s % 3}", priority=s % 4,
+                deadline_s=float(10 + s), at=float(3 * s % 17),
+                problem=prob)
+        fps.append(_fingerprint(c.run_all()))
+    assert fps[0] == fps[1]

@@ -1,0 +1,285 @@
+"""Trace-driven load generator (runtime/loadgen.py).
+
+The load-bearing properties: (1) DETERMINISM — the same ``LoadSpec``
+produces a byte-identical ``TraceWorkload`` (the regression-gate anchor
+rests on it); (2) model fidelity — the generated trace passes its own
+``compare_to_model()`` sanity report for all three models (rate within
+tolerance, duration CDF matching the configured mixture, Zipf tenant
+skew present); (3) shape invariants — sorted arrivals inside the
+horizon, clamped durations/rounds, crc32 tenant bucketing stable across
+processes; (4) the real-Azure CSV ingestion round-trip on synthetic
+CSVs in the trace's published format.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+from repro.runtime.loadgen import (DEFAULT_TEMPLATES, LoadSpec, TraceJob,
+                                   TraceWorkload, generate,
+                                   load_azure_durations,
+                                   load_azure_invocations, tenant_of)
+
+
+def _trace_key(wl: TraceWorkload):
+    return [(j.submit_at, j.app, j.tenant, j.template, j.n_workers,
+             j.max_rounds, j.duration_s, j.deadline_s, j.seed)
+            for j in wl.jobs]
+
+
+# ---------------------------------------------------------------------------
+# determinism + shape invariants
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_same_trace():
+    spec = LoadSpec(model="azure", jobs=400, horizon_s=3600.0, seed=9)
+    assert _trace_key(generate(spec)) == _trace_key(generate(spec))
+
+
+def test_different_seed_different_trace():
+    a = generate(LoadSpec(model="azure", jobs=400, seed=1))
+    b = generate(LoadSpec(model="azure", jobs=400, seed=2))
+    assert _trace_key(a) != _trace_key(b)
+
+
+def test_seed_varies_realization_not_universe():
+    """``seed`` redraws arrivals/invocations from the SAME app
+    population (``universe_seed``) — the property compare_to_model's
+    reference redraw rests on."""
+    a = generate(LoadSpec(model="azure", jobs=2000, seed=1))
+    b = generate(LoadSpec(model="azure", jobs=2000, seed=2))
+    da = np.sort(np.log([j.duration_s for j in a.jobs]))
+    db = np.sort(np.log([j.duration_s for j in b.jobs]))
+    grid = np.unique(np.concatenate([da, db]))
+    gap = np.max(np.abs(
+        np.searchsorted(da, grid, side="right") / len(da)
+        - np.searchsorted(db, grid, side="right") / len(db)))
+    assert gap < 0.08                       # same duration mixture
+    c = generate(LoadSpec(model="azure", jobs=2000, seed=1,
+                          universe_seed=5))
+    assert _trace_key(a) != _trace_key(c)   # new population, new trace
+
+
+@pytest.mark.parametrize("model", ["azure", "poisson", "onoff"])
+def test_shape_invariants(model):
+    spec = LoadSpec(model=model, jobs=500, horizon_s=1800.0, seed=3,
+                    rounds_min=2, rounds_max=30)
+    wl = generate(spec)
+    assert len(wl) == 500                   # exact-count mode is exact
+    times = [j.submit_at for j in wl.jobs]
+    assert times == sorted(times)
+    assert all(0.0 <= t <= spec.horizon_s for t in times)
+    for j in wl.jobs:
+        assert 0.5 <= j.duration_s <= spec.duration_cap_s
+        assert spec.rounds_min <= j.max_rounds <= spec.rounds_max
+        assert j.n_workers in spec.fleet_choices
+        assert j.template in spec.templates
+        assert j.deadline_s == pytest.approx(
+            spec.deadline_floor_s + spec.slo_slack * j.duration_s)
+        assert j.tenant == tenant_of(j.app, spec.n_tenants)
+
+
+def test_rate_driven_count_tracks_rate():
+    spec = LoadSpec(model="poisson", horizon_s=3600.0, rate_per_min=10.0,
+                    seed=0)
+    n = len(generate(spec))
+    assert 500 < n < 700                    # 600 expected, Poisson spread
+
+
+def test_tenant_hash_is_stable_crc32():
+    # literal pins: zlib.crc32 is platform-stable, unlike hash()
+    assert tenant_of("app000", 8) == f"t{1031003840 % 8}"  # == t0
+    assert tenant_of("app000", 8) == tenant_of("app000", 8)
+    assert tenant_of("", 1) == "t0"
+
+
+def test_zipf_popularity_skew():
+    wl = generate(LoadSpec(model="azure", jobs=3000, seed=4))
+    counts = {}
+    for j in wl.jobs:
+        counts[j.app] = counts.get(j.app, 0) + 1
+    top = max(counts.values()) / len(wl)
+    assert top > 3.0 / wl.spec.n_apps       # way above uniform
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="model"):
+        LoadSpec(model="weibull")
+    with pytest.raises(ValueError, match="same length"):
+        LoadSpec(fleet_choices=(2, 4), fleet_weights=(1.0,))
+    with pytest.raises(ValueError, match="template"):
+        LoadSpec(templates=())
+    with pytest.raises(ValueError, match="unknown template"):
+        generate(LoadSpec(templates=("nope",)))
+
+
+# ---------------------------------------------------------------------------
+# model fidelity (compare_to_model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["azure", "poisson", "onoff"])
+def test_compare_to_model_passes_own_sanity(model):
+    wl = generate(LoadSpec(model=model, jobs=1500, horizon_s=4 * 3600.0,
+                           seed=6))
+    rep = wl.compare_to_model()
+    assert rep["ok"], rep
+    assert rep["rate"]["ok"] and rep["duration"]["ok"]
+    assert rep["n_jobs"] == 1500
+
+
+def test_burst_models_are_burstier_than_poisson():
+    kw = dict(jobs=2000, horizon_s=4 * 3600.0, seed=8)
+    p2m = {m: generate(LoadSpec(model=m, **kw)).compare_to_model()
+           ["rate"]["peak_to_mean"] for m in ("poisson", "azure", "onoff")}
+    assert p2m["azure"] > p2m["poisson"]
+    assert p2m["onoff"] > p2m["poisson"]
+
+
+def test_durations_are_heavy_tailed():
+    wl = generate(LoadSpec(model="azure", jobs=3000, seed=2))
+    q = wl.duration_quantiles()
+    assert q["p99"] / q["p50"] > 4.0        # app spread + Pareto tail
+
+
+def test_rate_histogram_sums_to_jobs():
+    wl = generate(LoadSpec(model="onoff", jobs=800, horizon_s=1800.0,
+                           seed=1))
+    assert int(wl.rate_histogram().sum()) == 800
+    shares = wl.tenant_shares()
+    assert abs(sum(shares.values()) - 1.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec mapping
+# ---------------------------------------------------------------------------
+
+
+def test_experiment_spec_wiring():
+    wl = generate(LoadSpec(model="poisson", jobs=20, horizon_s=600.0,
+                           seed=5))
+    seeds = set()
+    for tj in wl.jobs:
+        spec = wl.experiment_spec(tj)
+        assert spec.scheduler.n_workers == tj.n_workers
+        assert spec.max_rounds == tj.max_rounds
+        assert spec.scheduler.admm.max_iters == tj.max_rounds
+        assert spec.scheduler.engine == "batched"
+        assert spec.scheduler.pool.provider.enabled
+        assert tj.tenant in spec.label and tj.app in spec.label
+        seeds.add(spec.scheduler.pool.seed)
+    assert len(seeds) == len(wl.jobs)       # per-job pool seeds unique
+
+
+def test_template_overrides_reach_spec():
+    tpl = {"t0": dict(problem="lasso",
+                      problem_kwargs=dict(n_samples=64, n_features=8),
+                      est_round_s=2.0,
+                      admm=dict(eps_primal=1e-12, eps_dual=1e-12),
+                      pool=dict(t_inner_floor_s=1.9))}
+    wl = generate(LoadSpec(model="poisson", jobs=5, horizon_s=60.0,
+                           seed=1, templates=("t0",)), templates=tpl)
+    spec = wl.experiment_spec(wl.jobs[0])
+    assert spec.scheduler.admm.eps_primal == 1e-12
+    assert spec.scheduler.pool.t_inner_floor_s == 1.9
+
+
+def test_problem_instances_shared_per_template():
+    wl = generate(LoadSpec(model="poisson", jobs=30, horizon_s=600.0,
+                           seed=5))
+    probs = wl.problem_instances()
+    assert set(probs) == {j.template for j in wl.jobs}
+    for name in probs:
+        tpl = DEFAULT_TEMPLATES[name]
+        assert probs[name].n_features == tpl["problem_kwargs"]["n_features"]
+
+
+def test_duration_to_rounds_mapping():
+    tpl = {"t0": dict(problem="lasso",
+                      problem_kwargs=dict(n_samples=64, n_features=8),
+                      est_round_s=10.0)}
+    wl = generate(LoadSpec(model="poisson", jobs=200, horizon_s=3600.0,
+                           seed=2, templates=("t0",), rounds_min=1,
+                           rounds_max=1000), templates=tpl)
+    for j in wl.jobs:
+        assert j.max_rounds == max(1, int(round(j.duration_s / 10.0)))
+
+
+# ---------------------------------------------------------------------------
+# the real-Azure CSV ingestion path
+# ---------------------------------------------------------------------------
+
+
+def _write_azure_csvs(tmp_path):
+    minutes = ",".join(str(i) for i in range(1, 1441))
+    inv = tmp_path / "invocations.csv"
+    inv.write_text(
+        f"HashOwner,HashApp,HashFunction,Trigger,{minutes}\n"
+        "o1,appA,f1,http," + ",".join(["3"] * 1440) + "\n"
+        "o1,appB,f2,timer," + ",".join(["1"] * 1440) + "\n")
+    dur = tmp_path / "durations.csv"
+    dur.write_text(
+        "HashOwner,HashApp,HashFunction,Average,Count,Minimum,Maximum\n"
+        "o1,appA,f1,5000,100,1,10\n"
+        "o1,appB,f2,60000,10,1,10\n")
+    return inv, dur
+
+
+def test_azure_csv_loaders(tmp_path):
+    inv, dur = _write_azure_csvs(tmp_path)
+    counts, weights = load_azure_invocations(inv)
+    assert len(counts) == 1440 and counts[0] == 4.0
+    assert weights["appA"] == pytest.approx(0.75)   # 3:1 invocation share
+    durs = load_azure_durations(dur)
+    assert durs["appA"] == pytest.approx(5.0)       # ms -> s
+    assert durs["appB"] == pytest.approx(60.0)
+
+
+def test_azure_csv_replay_shapes_trace(tmp_path):
+    inv, dur = _write_azure_csvs(tmp_path)
+    wl = generate(LoadSpec(model="azure", jobs=400, horizon_s=3600.0,
+                           seed=2, azure_invocations_csv=str(inv),
+                           azure_durations_csv=str(dur)))
+    counts = {}
+    for j in wl.jobs:
+        counts[j.app] = counts.get(j.app, 0) + 1
+    assert set(counts) <= {"appA", "appB"}
+    assert counts["appA"] > 2 * counts["appB"]      # 3:1 popularity
+    med_a = np.median([j.duration_s for j in wl.jobs if j.app == "appA"])
+    med_b = np.median([j.duration_s for j in wl.jobs if j.app == "appB"])
+    assert med_b > 4 * med_a                        # 60s vs 5s apps
+
+
+def test_azure_csv_missing_file_raises():
+    with pytest.raises(FileNotFoundError):
+        generate(LoadSpec(model="azure", jobs=10,
+                          azure_invocations_csv="/no/such/file.csv"))
+
+
+# ---------------------------------------------------------------------------
+# property: generation invariants under random specs
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.sampled_from(["azure", "poisson", "onoff"]),
+       st.integers(min_value=1, max_value=300),
+       st.integers(min_value=5, max_value=240))
+@settings(max_examples=20, deadline=None)
+def test_generate_invariants_random(seed, model, jobs, horizon_min):
+    spec = LoadSpec(model=model, jobs=jobs, horizon_s=horizon_min * 60.0,
+                    seed=seed)
+    wl = generate(spec)
+    assert len(wl) == jobs
+    times = [j.submit_at for j in wl.jobs]
+    assert times == sorted(times)
+    assert all(0.0 <= t <= spec.horizon_s and math.isfinite(t)
+               for t in times)
+    for j in wl.jobs:
+        assert 0.5 <= j.duration_s <= spec.duration_cap_s
+        assert spec.rounds_min <= j.max_rounds <= spec.rounds_max
+    # regenerating is byte-identical even under random specs
+    assert _trace_key(wl) == _trace_key(generate(spec))
