@@ -28,6 +28,11 @@ WORKLOADS = {
     "lasso": dict(n_samples=1024, n_features=96),
     "svm": dict(n_samples=1024, n_features=96),
     "softmax": dict(n_samples=768, n_features=24, n_classes=6),
+    # the ADMM twin of newton_sketch (l2 master regularizer); the
+    # second-order workload itself is benched head-to-head in
+    # bench_newton.py (it rejects async_, so it has no cell here)
+    "logreg_l2": dict(n_samples=1024, n_features=96, lam2=1e-2,
+                      fista=dict(min_iters=1, eps_grad=1e-3)),
 }
 MODES = ("sync", "drop_slowest", "replicated", "async_")
 FANINS = ("flat", "tree")

@@ -73,6 +73,17 @@ SPEC = [
     ("bench_kernels.json", "engine_compare.256.xla.r_norm", 0.05),
     ("bench_kernels.json", "engine_compare.256.pallas.r_norm", 0.05),
     ("bench_kernels.json", "engine_compare.1024.pallas.r_norm", 0.05),
+    # OverSketched Newton head-to-head (bench_newton, W=64): round counts
+    # are exact — the simulator is deterministic and the coded decode
+    # makes the straggler-leg trace IDENTICAL to the clean one, so the
+    # two newton round counts must stay equal as well as pinned; the
+    # >= 5x round_ratio over the ADMM twin is the headline second-order
+    # claim.  $-to-target gets the usual small float rtol.
+    ("bench_newton.json", "newton.clean.rounds_to_target", 0.0),
+    ("bench_newton.json", "newton.straggler.rounds_to_target", 0.0),
+    ("bench_newton.json", "admm.clean.rounds_to_target", 0.0),
+    ("bench_newton.json", "round_ratio", 0.0),
+    ("bench_newton.json", "newton.clean.cost_to_target_usd", 0.05),
 ]
 
 

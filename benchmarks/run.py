@@ -25,8 +25,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_admm_vs_sgd, bench_cluster,
                             bench_compression, bench_cost, bench_kernels,
-                            bench_load, bench_scale, bench_workloads,
-                            fig3_convergence, fig4_speedup,
+                            bench_load, bench_newton, bench_scale,
+                            bench_workloads, fig3_convergence, fig4_speedup,
                             fig67_histograms, fig8_coldstart, roofline)
 
     jobs = [
@@ -45,6 +45,7 @@ def main(argv=None) -> None:
         ("bench_workloads", lambda: bench_workloads.main()),
         ("bench_scale", lambda: bench_scale.main()),
         ("admm_vs_sgd", lambda: bench_admm_vs_sgd.main()),
+        ("bench_newton", lambda: bench_newton.main()),
         ("roofline", lambda: roofline.main()),
     ]
     names = [name for name, _ in jobs]

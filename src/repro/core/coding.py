@@ -40,27 +40,65 @@ def frs_matrix(n_workers: int, r: int) -> np.ndarray:
     return B
 
 
-def cyclic_matrix(n_workers: int, r: int) -> np.ndarray:
+def _build_cyclic(H: np.ndarray, n_workers: int, r: int) -> np.ndarray:
+    """One cyclic-construction attempt from a given H (s, W).  Raises
+    np.linalg.LinAlgError when some s×s subsystem is singular, too
+    ill-conditioned to trust, or yields badly scaled coefficients (a
+    measure-zero event for Gaussian H, but real for unlucky draws —
+    e.g. seed-0 (W=12, r=4) lands at max|coeff| ≈ 1470, and rounding
+    that B to f32 breaks the decode identity aᵀB = 1ᵀ at the 1e-4
+    exactness tolerance)."""
+    W, s = n_workers, r - 1
+    B = np.zeros((W, W))
+    for i in range(W):
+        cols = [(i + j) % W for j in range(r)]
+        sub = H[:, cols[1:]]
+        if np.linalg.cond(sub) > 1e12:
+            raise np.linalg.LinAlgError(
+                f"ill-conditioned cyclic subsystem at row {i}")
+        B[i, cols[0]] = 1.0
+        # solve H[:, cols[1:]] @ x = -H[:, cols[0]]  (s x s system)
+        x = np.linalg.solve(sub, -H[:, cols[0]])
+        if not np.all(np.isfinite(x)):
+            raise np.linalg.LinAlgError(
+                f"non-finite cyclic coefficients at row {i}")
+        if np.abs(x).max() > 100.0:
+            raise np.linalg.LinAlgError(
+                f"badly scaled cyclic coefficients at row {i} "
+                f"(max |coeff| = {np.abs(x).max():.1f})")
+        B[i, cols[1:]] = x
+    return B.astype(np.float32)
+
+
+def cyclic_matrix(n_workers: int, r: int, seed: int = 0,
+                  max_retries: int = 8) -> np.ndarray:
     """B (W, W): Tandon et al. Algorithm 2 (cyclic repetition scheme).
 
     Worker w covers shards {w, ..., w+s mod W} (s = r-1) with coefficients
     chosen so 1^T lies in the span of ANY W-s rows: construct a random
     H (s, W) whose columns sum to zero, then pick each row's coefficients
-    in the null space of the corresponding H columns."""
+    in the null space of the corresponding H columns.
+
+    An unlucky H can make one of the s×s subsystems singular (or so
+    ill-conditioned the decode tolerance blows up); each failed attempt
+    reseeds H deterministically (seed+attempt) up to ``max_retries``
+    extra times before raising a clear error."""
     W, s = n_workers, r - 1
     if s == 0:
         return np.eye(W, dtype=np.float32)
-    rng = np.random.RandomState(0)
-    H = rng.randn(s, W)
-    H[:, -1] = -H[:, :-1].sum(axis=1)          # columns sum to zero
-    B = np.zeros((W, W))
-    for i in range(W):
-        cols = [(i + j) % W for j in range(r)]
-        B[i, cols[0]] = 1.0
-        # solve H[:, cols[1:]] @ x = -H[:, cols[0]]  (s x s system)
-        x = np.linalg.solve(H[:, cols[1:]], -H[:, cols[0]])
-        B[i, cols[1:]] = x
-    return B.astype(np.float32)
+    last_err: Exception | None = None
+    for attempt in range(max_retries + 1):
+        rng = np.random.RandomState(seed + attempt)
+        H = rng.randn(s, W)
+        H[:, -1] = -H[:, :-1].sum(axis=1)      # columns sum to zero
+        try:
+            return _build_cyclic(H, W, r)
+        except np.linalg.LinAlgError as err:
+            last_err = err
+    raise ValueError(
+        f"cyclic_matrix(W={W}, r={r}): all {max_retries + 1} H draws "
+        f"produced a singular/ill-conditioned subsystem; last failure: "
+        f"{last_err}")
 
 
 def encode(B: np.ndarray, shard_grads: jnp.ndarray) -> jnp.ndarray:
@@ -68,14 +106,55 @@ def encode(B: np.ndarray, shard_grads: jnp.ndarray) -> jnp.ndarray:
     return jnp.asarray(B) @ shard_grads
 
 
+def _frs_groups(B: np.ndarray):
+    """Row supports of an FRS matrix, or None when B is not FRS-shaped.
+
+    FRS structure: binary B whose distinct row supports are disjoint and
+    partition the K columns; rows sharing a support form a group of
+    identical replicas."""
+    binary = (B == 0) | (B == 1)
+    if not binary.all():
+        return None
+    supports = {}
+    for w in range(B.shape[0]):
+        key = B[w].tobytes()
+        supports.setdefault(key, (np.nonzero(B[w])[0], []))[1].append(w)
+    covered = np.zeros(B.shape[1], np.int64)
+    for cols, _ in supports.values():
+        if len(cols) == 0:
+            return None
+        covered[cols] += 1
+    if not (covered == 1).all():                # disjoint + exhaustive
+        return None
+    return list(supports.values())
+
+
 def decode_coeffs(B: np.ndarray, responders: np.ndarray) -> np.ndarray:
     """a (|responders|,) with  a^T B[responders] = 1^T  (exact sum).
 
-    FRS: closed form (one representative per group).  General B: lstsq.
-    Raises if the responder set cannot reconstruct (too many stragglers).
-    """
-    Bs = B[responders]                                   # (R, K)
-    ones = np.ones(B.shape[1], np.float32)
+    FRS: closed form (one representative per group, coefficient 1 — no
+    linear solve).  General B: lstsq.  Raises if the responder set
+    cannot reconstruct (too many stragglers)."""
+    responders = np.asarray(responders)
+    groups = _frs_groups(B)
+    if groups is not None:
+        resp_set = set(int(w) for w in responders)
+        pos = {int(w): i for i, w in enumerate(responders)}
+        a = np.zeros(len(responders), np.float32)
+        for _, members in groups:
+            rep = next((w for w in members if w in resp_set), None)
+            if rep is None:
+                raise ValueError(
+                    "responder set cannot reconstruct the exact sum "
+                    f"(no responder in group {members}; "
+                    f"{len(responders)}/{B.shape[0]} responders)")
+            a[pos[rep]] = 1.0
+        return a
+    Bs = B[responders].astype(np.float64)                # (R, K)
+    ones = np.ones(B.shape[1], np.float64)
+    # f64 solve: an ill-conditioned (but decodable) cyclic subsystem can
+    # miss the exactness check in f32; the coefficients are downcast on
+    # return so message combination stays in wire precision
     a, *_ = np.linalg.lstsq(Bs.T, ones, rcond=None)
     if not np.allclose(Bs.T @ a, ones, atol=1e-4):
         raise ValueError("responder set cannot reconstruct the exact sum "

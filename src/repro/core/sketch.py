@@ -1,0 +1,273 @@
+"""Sketched linear algebra for second-order serverless optimization
+(OverSketch-style blocked sketched Gram, Gupta et al. 2019).
+
+The source paper's outlook (§V-A) points past first-order ADMM — whose
+ROUND COUNT dominates cost at scale — toward coded optimization.
+*OverSketched Newton* is the concrete second-order instance: the Newton
+Hessian ``H = A'ᵀA'`` (``A'`` the weighted data matrix) is approximated
+by a sketched Gram ``(S A')ᵀ(S A')`` computed as a SUM of independent
+block contributions, so it distributes over serverless workers exactly
+like a gradient does — and the same straggler defenses apply.
+
+Structure.  The sketch ``S`` is a stack of ``n_tasks = n_blocks + s``
+INDEPENDENT sketch blocks ``S_k`` (count-sketch or SRHT), each of
+``block_rows`` rows, scaled ``1/sqrt(n_used)``:
+
+    (S A)ᵀ(S A)  =  (1/n_used) · Σ_k  (S_k A)ᵀ(S_k A)
+                 =  mean of per-block Grams,  E[(S_k A)ᵀ(S_k A)] = AᵀA.
+
+Because every block is a self-contained sketch, the stack is
+OVER-PROVISIONED: any ``n_blocks`` of the ``n_blocks + s`` blocks form a
+valid sketch of at least ``sketch_dim`` rows.  Two straggler defenses:
+
+* **ignore-extra-blocks** (``coded=False``) — the master averages the
+  first ``n_blocks`` block Grams to arrive and ignores the rest: an
+  unbiased sketched Hessian whose realization depends on WHICH blocks
+  arrived (OverSketch's own scheme; maps onto the scheduler's
+  ``drop_slowest`` barrier).
+* **decode-from-any-subset** (``coded=True``, default) — the per-block
+  values are linearly encoded with a gradient-coding matrix
+  (``core/coding.py``: FRS when ``(s+1) | n_tasks``, else cyclic), so
+  the master reconstructs the EXACT full-stack sum — the sketched
+  Hessian of the complete over-provisioned ``S`` — from ANY
+  ``n_blocks`` of the ``n_blocks + s`` responses (maps onto the
+  scheduler's ``replicated`` barrier, with sketch redundancy replacing
+  physical replication: every worker does useful work).
+
+``encode``/``decode_sum`` are generic over per-block vectors, so one
+code path protects BOTH the Hessian blocks and the per-block gradient
+shards (plain gradient coding) in ``problems/newton_sketch.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding
+
+
+# ---------------------------------------------------------------------------
+# Sketch operators
+# ---------------------------------------------------------------------------
+
+
+def count_sketch_map(n_rows: int, m: int, seed) -> Tuple[np.ndarray,
+                                                         np.ndarray]:
+    """Count-sketch hash: (buckets (n,), signs (n,)) — row i lands in
+    bucket ``buckets[i]`` with sign ``signs[i]``.  ``E[SᵀS] = I``."""
+    rng = np.random.RandomState(seed)
+    buckets = rng.randint(0, m, size=n_rows).astype(np.int32)
+    signs = (rng.randint(0, 2, size=n_rows) * 2 - 1).astype(np.float32)
+    return buckets, signs
+
+
+def count_sketch_matrix(n_rows: int, m: int, seed=0) -> np.ndarray:
+    """Materialized count-sketch ``S`` (m, n): one ±1 per column."""
+    buckets, signs = count_sketch_map(n_rows, m, seed)
+    S = np.zeros((m, n_rows), np.float32)
+    S[buckets, np.arange(n_rows)] = signs
+    return S
+
+
+def _popcount(a: np.ndarray) -> np.ndarray:
+    out = np.zeros_like(a)
+    x = a.copy()
+    while x.any():
+        out += x & 1
+        x >>= 1
+    return out
+
+
+def srht_matrix(n_rows: int, m: int, seed=0) -> np.ndarray:
+    """Subsampled randomized Hadamard transform ``S`` (m, n):
+    ``sqrt(n_pad/m) · P · (H/sqrt(n_pad)) · D`` with ``D`` a random ±1
+    diagonal, ``H`` the ``n_pad = 2^ceil(log2 n)`` Hadamard matrix and
+    ``P`` a uniform row sample — truncated to the first n columns
+    (zero-padding A's rows ≡ dropping S's extra columns).  Only the m
+    sampled Hadamard rows are ever materialized (``H[j,i] =
+    (-1)^popcount(j&i)``), so no n_pad×n_pad intermediate exists."""
+    if n_rows < 1:
+        raise ValueError("srht needs n_rows >= 1")
+    rng = np.random.RandomState(seed)
+    n_pad = 1 << max(int(math.ceil(math.log2(n_rows))), 0)
+    signs = (rng.randint(0, 2, size=n_rows) * 2 - 1).astype(np.float32)
+    rows = rng.choice(n_pad, size=m, replace=(m > n_pad))
+    i = np.arange(n_rows, dtype=np.int64)
+    H = np.where(_popcount(rows[:, None].astype(np.int64) & i[None, :]) % 2,
+                 np.float32(-1.0), np.float32(1.0))
+    return np.sqrt(np.float32(n_pad) / m) / np.sqrt(np.float32(n_pad)) \
+        * H * signs[None, :]
+
+
+def sketch_matrix(method: str, n_rows: int, m: int, seed=0) -> np.ndarray:
+    """Dispatcher: a dense (m, n) sketch with ``E[SᵀS] = I``."""
+    if method == "count":
+        return count_sketch_matrix(n_rows, m, seed)
+    if method == "srht":
+        return srht_matrix(n_rows, m, seed)
+    raise ValueError(f"unknown sketch method {method!r} "
+                     f"(choose 'count' or 'srht')")
+
+
+def sketched_gram(A: np.ndarray, sketch_dim: int, *, method: str = "count",
+                  seed=0) -> np.ndarray:
+    """One-shot ``AᵀSᵀSA`` at the given sketch dimension (no blocking) —
+    the spectral-approximation reference the property tests sandwich."""
+    S = sketch_matrix(method, A.shape[0], sketch_dim, seed)
+    SA = S @ np.asarray(A)
+    return SA.T @ SA
+
+
+# ---------------------------------------------------------------------------
+# The blocked, over-provisioned, optionally coded plan
+# ---------------------------------------------------------------------------
+
+
+class BlockSketch:
+    """Over-provisioned blocked sketch of an (n_rows, d) row matrix.
+
+    ``n_tasks`` worker tasks, ``redundancy`` s of them expendable:
+    ``n_blocks = n_tasks - s`` blocks suffice, each block an independent
+    ``block_rows = ceil(sketch_dim / n_blocks)``-row sketch of the FULL
+    matrix, so any surviving ``n_blocks``-subset carries at least
+    ``sketch_dim`` rows.  See the module docstring for the coded /
+    uncoded decode semantics.
+    """
+
+    def __init__(self, n_rows: int, n_tasks: int, *, sketch_dim: int,
+                 redundancy: int = 1, method: str = "count",
+                 coded: bool = True, scheme: str = "auto", seed: int = 0):
+        if n_tasks < 1:
+            raise ValueError("need n_tasks >= 1")
+        if not 0 <= redundancy < n_tasks:
+            raise ValueError(f"redundancy must be in [0, n_tasks) "
+                             f"(got s={redundancy}, n_tasks={n_tasks})")
+        if sketch_dim < 1:
+            raise ValueError("need sketch_dim >= 1")
+        self.n_rows = int(n_rows)
+        self.n_tasks = int(n_tasks)
+        self.redundancy = int(redundancy)
+        self.n_blocks = self.n_tasks - self.redundancy
+        self.block_rows = int(math.ceil(sketch_dim / self.n_blocks))
+        self.sketch_dim = int(sketch_dim)
+        self.method = method
+        self.coded = bool(coded)
+        self.seed = int(seed)
+        if method not in ("count", "srht"):
+            raise ValueError(f"unknown sketch method {method!r}")
+        # per-block operators (independent seeds)
+        if method == "count":
+            maps = [count_sketch_map(n_rows, self.block_rows,
+                                     [self.seed, k])
+                    for k in range(self.n_tasks)]
+            self.buckets = np.stack([b for b, _ in maps])     # (W, n)
+            self.signs = np.stack([s for _, s in maps])       # (W, n)
+            self._S = None
+        else:
+            self.buckets = self.signs = None
+            self._S = np.stack([srht_matrix(n_rows, self.block_rows,
+                                            [self.seed, k])
+                                for k in range(self.n_tasks)])  # (W, b, n)
+        # the straggler code over per-block values
+        r = self.redundancy + 1
+        if not self.coded or r == 1:
+            self.B: Optional[np.ndarray] = (np.eye(self.n_tasks, dtype=np.float32)
+                                            if self.coded else None)
+        elif scheme == "frs" or (scheme == "auto"
+                                 and self.n_tasks % r == 0):
+            self.B = coding.frs_matrix(self.n_tasks, r)
+        elif scheme in ("auto", "cyclic"):
+            self.B = coding.cyclic_matrix(self.n_tasks, r)
+        else:
+            raise ValueError(f"unknown coding scheme {scheme!r}")
+
+    # -- per-task structure (the workload's timing model reads these) -------
+    def blocks_of_task(self, w: int) -> np.ndarray:
+        """Block ids task ``w`` must compute: the support of its coding
+        row (r = s+1 blocks) when coded, else just its own block."""
+        if self.B is None or self.redundancy == 0:
+            return np.array([w])
+        return np.nonzero(self.B[w])[0]
+
+    def blocks_per_task(self) -> int:
+        return (self.redundancy + 1) if self.coded else 1
+
+    # -- block application --------------------------------------------------
+    def apply_block(self, k: int, M) -> jnp.ndarray:
+        """``S_k M`` for one block (UNSCALED: ``E[(S_k M)ᵀ(S_k M)] = MᵀM``)."""
+        M = jnp.asarray(M)
+        if self.method == "count":
+            return jnp.zeros((self.block_rows, M.shape[1]), M.dtype) \
+                .at[jnp.asarray(self.buckets[k])] \
+                .add(jnp.asarray(self.signs[k])[:, None] * M)
+        return jnp.asarray(self._S[k], M.dtype) @ M
+
+    def apply_all(self, M) -> jnp.ndarray:
+        """Every block in one call: (n_tasks, block_rows, d).  This is the
+        stacked-block path both scheduler engines route through."""
+        M = jnp.asarray(M)
+        if self.method == "count":
+            bk = jnp.asarray(self.buckets)
+            sg = jnp.asarray(self.signs)
+
+            def one(b, s):
+                return jnp.zeros((self.block_rows, M.shape[1]), M.dtype) \
+                    .at[b].add(s[:, None] * M)
+            return jax.vmap(one)(bk, sg)
+        return jnp.einsum("wbn,nd->wbd", jnp.asarray(self._S, M.dtype), M)
+
+    def block_grams(self, M) -> jnp.ndarray:
+        """(n_tasks, d, d) per-block Gram contributions (unscaled)."""
+        SA = self.apply_all(M)
+        return jnp.einsum("wbd,wbe->wde", SA, SA)
+
+    # -- full-stack oracles (tests / master-side references) ----------------
+    def sketch(self, M) -> jnp.ndarray:
+        """The full over-provisioned ``S M``, scaled ``1/sqrt(n_tasks)``
+        so ``(SM)ᵀ(SM)`` is the mean of block Grams."""
+        SA = self.apply_all(M)
+        return SA.reshape(-1, SA.shape[-1]) / jnp.sqrt(
+            jnp.asarray(float(self.n_tasks), SA.dtype))
+
+    def gram(self, M) -> jnp.ndarray:
+        """``(SM)ᵀ(SM)`` of the full stack — EXACTLY what the coded
+        decode reconstructs under any ``redundancy`` dropped blocks."""
+        SA = self.sketch(M)
+        return SA.T @ SA
+
+    # -- straggler code over per-block values -------------------------------
+    def encode(self, values) -> np.ndarray:
+        """Per-task messages from per-block values (n_tasks, L): the
+        coding combination ``B @ values`` when coded, else identity."""
+        values = np.asarray(values)
+        if values.shape[0] != self.n_tasks:
+            raise ValueError(f"expected {self.n_tasks} block values, "
+                             f"got {values.shape[0]}")
+        if self.B is None:
+            return values
+        return self.B.astype(values.dtype) @ values
+
+    def decode_sum(self, responders, messages) -> Tuple[np.ndarray, int]:
+        """(Σ of block values, n_blocks_summed) from responder messages.
+
+        Coded: the EXACT sum over ALL ``n_tasks`` blocks, from any
+        ``n_blocks`` responders (``coding.decode_coeffs``; raises when
+        the subset cannot reconstruct).  Uncoded: the plain sum over the
+        arrived blocks (ignore-extra-blocks; requires at least
+        ``n_blocks`` of them so the surviving sketch keeps
+        ``sketch_dim`` rows)."""
+        responders = np.asarray(responders)
+        messages = np.asarray(messages)
+        if self.B is not None:
+            a = coding.decode_coeffs(self.B, responders)
+            return a.astype(messages.dtype) @ messages, self.n_tasks
+        if len(responders) < self.n_blocks:
+            raise ValueError(
+                f"ignore-extra-blocks needs >= {self.n_blocks} of "
+                f"{self.n_tasks} blocks, got {len(responders)}")
+        return messages.sum(axis=0), len(responders)

@@ -21,6 +21,8 @@ from repro.problems.base import (BatchedShardProblem, FistaShardProblem,
                                  make, register, unregister)
 from repro.problems.lasso import LassoProblem
 from repro.problems.logreg import LogRegProblem
+from repro.problems.newton_sketch import (LogRegL2Problem,
+                                          NewtonSketchProblem)
 from repro.problems.softmax import SoftmaxProblem
 from repro.problems.svm import SVMProblem
 
@@ -28,4 +30,5 @@ __all__ = [
     "WorkerProblem", "FistaShardProblem", "BatchedShardProblem",
     "register", "unregister", "make", "available", "as_fista_options",
     "LogRegProblem", "LassoProblem", "SVMProblem", "SoftmaxProblem",
+    "NewtonSketchProblem", "LogRegL2Problem",
 ]

@@ -177,11 +177,44 @@ class Scheduler:
         self.start_time = start_time
         W, d = cfg.n_workers, problem.n_features
         dt = getattr(problem, "dtype", jnp.float32)
+        # second-order problems (problem.second_order = True, e.g.
+        # newton_sketch) route rounds through run_round_newton: workers
+        # send coded Hessian-sketch blocks, the master takes a Newton
+        # step, and the ADMM x/u/omega machinery below sits unused.
+        self._second_order = bool(getattr(problem, "second_order", False))
+        if self._second_order and cfg.mode == "async_":
+            raise ValueError(
+                "async_ mode is not supported for second-order problems "
+                "(the Newton step needs a consistent decoded Hessian)")
+        if self._second_order and cfg.compress != "none":
+            raise ValueError(
+                "compression is not supported for second-order problems "
+                "(lossy sketch blocks break the exact-decode guarantee)")
         # replicated mode: W physical slots host W/r LOGICAL workers; the r
         # replicas of a logical worker solve the SAME shard (deterministic
         # FISTA -> identical results), so first-responder-wins is exact
         # under any r-1 stragglers/failures (repro.core.coding semantics).
-        self.repl = cfg.replication if cfg.mode == "replicated" else 1
+        # Second-order replicated mode keeps W logical workers: sketch
+        # redundancy replaces physical replication (the master decodes the
+        # exact Hessian from the first W-(r-1) responses; every worker
+        # does useful work).
+        self.repl = (cfg.replication
+                     if cfg.mode == "replicated" and not self._second_order
+                     else 1)
+        if (self._second_order and cfg.mode == "replicated"
+                and getattr(problem, "redundancy", 0) < cfg.replication - 1):
+            raise ValueError(
+                f"replicated mode with replication={cfg.replication} needs "
+                f"problem redundancy >= {cfg.replication - 1} spare sketch "
+                f"blocks (got {getattr(problem, 'redundancy', 0)})")
+        if (self._second_order and cfg.mode == "drop_slowest"
+                and int(cfg.drop_frac * W) > getattr(problem,
+                                                     "redundancy", 0)):
+            raise ValueError(
+                f"drop_slowest would drop {int(cfg.drop_frac * W)} blocks "
+                f"but the sketch plan only over-provisions "
+                f"{getattr(problem, 'redundancy', 0)} — raise the "
+                f"problem's redundancy or lower drop_frac")
         if W % self.repl:
             raise ValueError("replicated mode needs r | W")
         self.n_logical = W // self.repl
@@ -205,7 +238,13 @@ class Scheduler:
             raise ValueError(f"engine must be 'loop' or 'batched', "
                              f"got {cfg.engine!r}")
         self._engine_batched = cfg.engine == "batched"
-        if self._engine_batched and not (
+        if self._engine_batched and self._second_order:
+            if not callable(getattr(problem, "round_messages_all", None)):
+                raise ValueError(
+                    f"engine='batched' needs the second-order problem to "
+                    f"implement round_messages_all (the stacked-block "
+                    f"path); {type(problem).__name__} does not")
+        elif self._engine_batched and not (
                 callable(getattr(problem, "solve_all", None))
                 and getattr(problem, "supports_batched", lambda: True)()):
             raise ValueError(
@@ -217,6 +256,10 @@ class Scheduler:
             raise ValueError(f"kernel must be 'xla' or 'pallas', "
                              f"got {cfg.kernel!r}")
         self._kernel_pallas = cfg.kernel == "pallas"
+        if self._kernel_pallas and self._second_order:
+            raise ValueError(
+                "kernel='pallas' fuses the FISTA loss/grad and z-update; "
+                "second-order problems have neither — use kernel='xla'")
         if (self._kernel_pallas and self._engine_batched
                 and not getattr(problem, "supports_kernel", lambda: False)()):
             raise ValueError(
@@ -231,9 +274,14 @@ class Scheduler:
         self.codec = OmegaCodec(cfg.compress, d, topk_frac=cfg.topk_frac,
                                 qsgd_bits=cfg.qsgd_bits)
         self.wire_d = cfg.wire_d or d
-        self.msg_bytes = message_bytes(cfg.compress, self.wire_d,
-                                       topk_frac=cfg.topk_frac,
-                                       qsgd_bits=cfg.qsgd_bits)
+        if self._second_order:
+            # uplink = the coded block message [g_k | vec(Gram_k)] plus
+            # the q slot every message carries (d+d²+1 f32 dense)
+            self.msg_bytes = 4 * (int(problem.message_floats) + 1)
+        else:
+            self.msg_bytes = message_bytes(cfg.compress, self.wire_d,
+                                           topk_frac=cfg.topk_frac,
+                                           qsgd_bits=cfg.qsgd_bits)
         self.meter = BillingMeter(cfg.billing)
         self._billed_spawns = 0
         self.autoscaler: Optional[Autoscaler] = None
@@ -510,6 +558,107 @@ class Scheduler:
         return m
 
     # ------------------------------------------------------------------
+    def run_round_newton(self) -> RoundMetrics:
+        """One second-order round (``problem.second_order = True``):
+        coded Hessian-sketch block messages up, a globalized Newton step
+        at the master (see ``problems/newton_sketch.py``; the block
+        algebra is ``core/sketch.py``).
+
+        Reuses the sync-family timing / barrier / fan-in / billing
+        machinery verbatim; the barrier modes map onto sketch semantics:
+
+        * ``sync`` — wait for all W block messages;
+        * ``drop_slowest`` — ignore-extra-blocks: proceed with the
+          fastest ``W - drop_frac·W`` blocks (the over-provisioned
+          sketch keeps >= sketch_dim rows as long as the problem's
+          ``redundancy`` covers the drop);
+        * ``replicated`` — decode-from-any-subset: wait for the first
+          ``W - (replication-1)`` responses and decode the EXACT
+          full-sketch Hessian via ``coding.decode_coeffs`` (sketch
+          redundancy replaces physical replication, so there are W
+          logical workers and every response is useful work).
+        """
+        cfg = self.cfg
+        W = cfg.n_workers
+        t_comp = np.zeros(W)
+        t_comm = np.zeros(W)
+        inner = np.zeros(W, np.int64)
+        round_start = self.sim_time
+
+        # respawn checks first, in wid order (same pool-RNG draw sequence
+        # for the loop and batched engines -> identical traces)
+        extras = np.zeros(W)
+        for wid in range(W):
+            extras[wid] = self._maybe_respawn(wid)
+        if self._engine_batched:
+            msgs, iters_all = self.problem.round_messages_all(self.z, W)
+        else:
+            out = [self.problem.round_message(wid, W, self.z)
+                   for wid in range(W)]
+            msgs = [m for m, _ in out]
+            iters_all = [it for _, it in out]
+        for wid in range(W):
+            inner[wid] = int(iters_all[wid])
+
+        timing_iters = inner.copy()
+        if cfg.iter_smoothing:
+            timing_iters[:] = max(int(np.median(inner)), 1)
+        rx = self.pool.comm_time(4 * self.wire_d)      # dense z downlink
+        tx = self.pool.comm_time(self.msg_bytes)       # block message up
+        arrivals = []
+        for wid in range(W):
+            tc = self.pool.compute_time(
+                self.pool.workers[wid], int(timing_iters[wid]),
+                self.problem.n_samples(wid, W))
+            t_comp[wid] = tc
+            t_comm[wid] = rx + tx
+            arrivals.append((round_start + extras[wid] + rx + tc + tx,
+                             wid))
+
+        if cfg.mode == "drop_slowest":
+            n_wait = W - int(cfg.drop_frac * W)
+            waited = sorted(arrivals)[:n_wait]
+        elif cfg.mode == "replicated":
+            waited = sorted(arrivals)[:W - (cfg.replication - 1)]
+        else:
+            waited = sorted(arrivals)
+
+        master_done = fanin_drain(waited, cfg.fanin, self.pool, cfg.tree,
+                                  self.msg_bytes, W)
+
+        responders = sorted(wid for _, wid in waited)
+        z_new, r_norm, s_norm = self.problem.master_step(
+            self.z, np.stack([np.asarray(msgs[w]) for w in responders]),
+            np.asarray(responders, np.int64), W)
+        self.z_prev, self.z = self.z, jnp.asarray(z_new, self.z.dtype)
+
+        bcast = self.pool.comm_time(4 * self.wire_d)
+        self.sim_time = master_done + bcast
+        round_wall = self.sim_time - round_start
+        t_idle = round_wall - t_comp
+        self.k += 1
+
+        # billing: identical story to run_round — every worker holds its
+        # memory for the whole round, every block uplink + z downlink
+        # crosses the boundary, the coordinator runs throughout
+        self._bill_spawns()
+        self.meter.record_duration(round_wall * W - float(extras.sum()))
+        self.meter.record_master(round_wall)
+        self.meter.record_bytes(W * (self.msg_bytes + 4 * self.wire_d))
+
+        thresh = np.quantile([t for t, _ in arrivals], 0.9)
+        m = RoundMetrics(
+            k=self.k, sim_time=self.sim_time, r_norm=r_norm, s_norm=s_norm,
+            rho=self.rho, t_comp=t_comp, t_comm=t_comm, t_idle=t_idle,
+            inner_iters=inner, n_respawns=self.n_respawns,
+            slowest10=np.array([t >= thresh for t, _ in arrivals]),
+            round_wall_s=round_wall,
+            t_fanin_wait=master_done - max(t for t, _ in waited),
+            cost_usd=self.meter.total_usd(), n_workers=W, z_nnz=-1)
+        self.history.append(m)
+        return m
+
+    # ------------------------------------------------------------------
     def run_async(self, max_updates: int,
                   on_round: Optional[Callable] = None) -> List[RoundMetrics]:
         """Bounded-staleness async ADMM: master updates z every
@@ -631,7 +780,8 @@ class Scheduler:
                              "async_ paces itself per-arrival (run_async)")
         if cfg.autoscale.policy != "off" and self.autoscaler is None:
             self.autoscaler = Autoscaler(cfg.autoscale, quantum=self.repl)
-        m = self.run_round()
+        m = (self.run_round_newton() if self._second_order
+             else self.run_round())
         if on_round:
             on_round(m)
         if (m.r_norm <= cfg.admm.eps_primal

@@ -137,3 +137,136 @@ def test_replicated_waited_sets_decode_exactly(rng):
     # and the scheduler's logical-group map matches the FRS layout
     for wid in range(W):
         assert sched._logical(wid) == wid // r
+
+
+# ---------------------------------------------------------------------------
+# FRS closed-form decode fast path (no lstsq for FRS-shaped B)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("W,r", [(4, 2), (8, 2), (8, 4), (12, 3)])
+def test_frs_fast_path_equivalent_to_lstsq(rng, W, r):
+    """The closed-form FRS decode (one representative per group,
+    coefficient 1) must reconstruct the SAME sum lstsq does, for every
+    decodable responder set — and its coefficients must be exactly
+    0/1 (no linear-solve roundoff)."""
+    B = coding.frs_matrix(W, r)
+    g = _grads(rng, W)
+    msgs = coding.encode(B, g)
+    total = np.asarray(g.sum(0))
+    ones = np.ones(W, np.float32)
+    for drop in itertools.combinations(range(W), r - 1):
+        resp = np.array([i for i in range(W) if i not in drop])
+        a = coding.decode_coeffs(B, resp)
+        assert set(np.unique(a)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(a @ B[resp], ones)   # exact identity
+        # lstsq reference on the same set
+        a_ref, *_ = np.linalg.lstsq(B[resp].T, ones, rcond=None)
+        np.testing.assert_allclose(np.asarray(coding.decode(B, resp,
+                                                            msgs[resp])),
+                                   a_ref @ np.asarray(msgs[resp]),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(a @ np.asarray(msgs[resp]), total,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_frs_structure_detection():
+    """The fast path must engage exactly on FRS-shaped matrices: binary
+    rows whose supports partition the columns.  Cyclic B (real-valued
+    coefficients) and ragged binary matrices fall back to lstsq."""
+    assert coding._frs_groups(coding.frs_matrix(8, 4)) is not None
+    assert coding._frs_groups(np.eye(5, dtype=np.float32)) is not None
+    assert coding._frs_groups(coding.cyclic_matrix(8, 3)) is None
+    ragged = np.array([[1, 1, 0], [0, 1, 1], [1, 0, 1]], np.float32)
+    assert coding._frs_groups(ragged) is None              # overlapping
+    with_zero_row = np.array([[1, 1, 0], [0, 0, 0], [0, 0, 1]], np.float32)
+    assert coding._frs_groups(with_zero_row) is None
+
+
+def test_frs_fast_path_whole_group_loss_still_fails(rng):
+    """The closed form must refuse exactly when lstsq would: a group with
+    zero responders cannot be represented."""
+    B = coding.frs_matrix(12, 3)
+    resp = np.array([i for i in range(12) if i not in (3, 4, 5)])
+    with pytest.raises(ValueError, match="cannot reconstruct"):
+        coding.decode_coeffs(B, resp)
+
+
+# ---------------------------------------------------------------------------
+# cyclic_matrix singular-H retry (bounded reseed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("W", [4, 5, 6, 8, 10, 12, 16, 20])
+@pytest.mark.parametrize("r", [2, 3, 4])
+def test_cyclic_matrix_sweep_decodes_exactly(rng, W, r):
+    """Regression sweep over (W, r): every construction must succeed (the
+    reseed loop absorbs unlucky H draws) and decode exactly from random
+    max-straggler responder sets."""
+    if r > W:
+        pytest.skip("r > W")
+    B = coding.cyclic_matrix(W, r)
+    assert np.isfinite(B).all()
+    g = _grads(rng, W)
+    msgs = coding.encode(B, g)
+    total = np.asarray(g.sum(0))
+    for _ in range(5):
+        drop = rng.choice(W, size=r - 1, replace=False)
+        resp = np.array(sorted(set(range(W)) - set(int(x) for x in drop)))
+        rec = coding.decode(B, resp, msgs[resp])
+        np.testing.assert_allclose(np.asarray(rec), total,
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_cyclic_seed0_matches_legacy_construction():
+    """The first attempt must reproduce the pre-retry construction (seed
+    0) byte-for-byte — the replicated-mode anchors depend on it."""
+    W, r, s = 8, 3, 2
+    rng = np.random.RandomState(0)
+    H = rng.randn(s, W)
+    H[:, -1] = -H[:, :-1].sum(axis=1)
+    legacy = np.zeros((W, W))
+    for i in range(W):
+        cols = [(i + j) % W for j in range(r)]
+        legacy[i, cols[0]] = 1.0
+        legacy[i, cols[1:]] = np.linalg.solve(H[:, cols[1:]],
+                                              -H[:, cols[0]])
+    np.testing.assert_array_equal(coding.cyclic_matrix(W, r),
+                                  legacy.astype(np.float32))
+
+
+def test_build_cyclic_singular_H_raises():
+    with pytest.raises(np.linalg.LinAlgError):
+        coding._build_cyclic(np.zeros((1, 4)), 4, 2)
+
+
+def test_cyclic_retry_reseeds_then_succeeds(monkeypatch):
+    """Two poisoned attempts, then the real construction: the bounded
+    reseed loop must land on attempt 3 with a valid matrix."""
+    real = coding._build_cyclic
+    calls = []
+
+    def flaky(H, W, r):
+        calls.append(1)
+        if len(calls) <= 2:
+            raise np.linalg.LinAlgError("poisoned attempt")
+        return real(H, W, r)
+
+    monkeypatch.setattr(coding, "_build_cyclic", flaky)
+    B = coding.cyclic_matrix(6, 3, max_retries=4)
+    assert len(calls) == 3
+    # attempt 2's H (seed 0+2) built it — still a valid code
+    g = jnp.asarray(np.random.RandomState(7).randn(6, 4).astype(np.float32))
+    msgs = coding.encode(B, g)
+    rec = coding.decode(B, np.arange(2, 6), msgs[2:])
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(g.sum(0)),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_cyclic_retry_exhausted_raises_clearly(monkeypatch):
+    def always_bad(H, W, r):
+        raise np.linalg.LinAlgError("always singular")
+
+    monkeypatch.setattr(coding, "_build_cyclic", always_bad)
+    with pytest.raises(ValueError, match="cyclic_matrix.*all 3 H draws"):
+        coding.cyclic_matrix(8, 2, max_retries=2)

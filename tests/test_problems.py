@@ -18,10 +18,16 @@ from repro.api import ExperimentSpec, run
 from repro.core.admm import AdmmOptions
 from repro.runtime import PoolConfig, SchedulerConfig
 
-# small instances per registered workload (real math, test-sized)
+# small instances per registered workload (real math, test-sized).
+# newton_sketch is registered but NOT conformance-tested here: it is a
+# second-order problem (no FISTA solve / prox contract) with its own
+# suite in tests/test_newton.py.
 SMALL = {
     "logreg": dict(n_samples=512, n_features=48, density=0.1, lam1=0.3,
                    fista=dict(min_iters=1, eps_grad=1e-3)),
+    "logreg_l2": dict(n_samples=512, n_features=48, density=0.1,
+                      lam2=1e-2,
+                      fista=dict(min_iters=1, eps_grad=1e-3)),
     "lasso": dict(n_samples=512, n_features=48),
     "svm": dict(n_samples=512, n_features=48, density=0.1),
     "softmax": dict(n_samples=384, n_features=16, n_classes=4),
@@ -33,7 +39,7 @@ def test_builtin_registry_is_covered():
     """Every built-in workload has a SMALL instance in this suite (a new
     registered workload must add one to be conformance-tested)."""
     assert set(problems.available()) >= set(NAMES)
-    builtin = {"logreg", "lasso", "svm", "softmax"}
+    builtin = {"logreg", "logreg_l2", "lasso", "svm", "softmax"}
     assert builtin <= set(NAMES)
 
 

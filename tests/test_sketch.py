@@ -1,0 +1,241 @@
+"""The sketched-linear-algebra subsystem (core/sketch.py): operator
+identities, the over-provisioned block plan, and the tentpole guarantee —
+the decoded sketched Hessian is EXACT (allclose to the full-stack
+``(SA)ᵀ(SA)``) under ANY ``s`` dropped blocks."""
+import itertools
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # real hypothesis in CI; stub offline
+
+from repro.core import coding
+from repro.core.sketch import (BlockSketch, count_sketch_map,
+                               count_sketch_matrix, sketch_matrix,
+                               sketched_gram, srht_matrix)
+
+
+def _A(rng, n=200, d=12):
+    return rng.randn(n, d).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# operators
+# ---------------------------------------------------------------------------
+
+
+def test_count_sketch_one_nonzero_per_column():
+    S = count_sketch_matrix(100, 30, seed=0)
+    assert S.shape == (30, 100)
+    nnz_per_col = (S != 0).sum(axis=0)
+    np.testing.assert_array_equal(nnz_per_col, np.ones(100))
+    assert set(np.unique(S[S != 0])) == {-1.0, 1.0}
+    # E[SᵀS] = I holds exactly on the diagonal (each column has unit norm)
+    np.testing.assert_allclose(np.diag(S.T @ S), np.ones(100))
+
+
+def test_count_sketch_map_matches_matrix():
+    buckets, signs = count_sketch_map(50, 10, seed=4)
+    S = count_sketch_matrix(50, 10, seed=4)
+    for i in range(50):
+        assert S[buckets[i], i] == signs[i]
+
+
+def test_srht_full_sample_is_exact_isometry():
+    """With m = n_pad and n a power of two, SRHT is a signed permuted
+    orthogonal transform: SᵀS = I exactly (not just in expectation)."""
+    S = srht_matrix(16, 16, seed=0)
+    np.testing.assert_allclose(S.T @ S, np.eye(16), atol=1e-5)
+
+
+def test_srht_diag_unit_columns():
+    S = srht_matrix(48, 32, seed=1)
+    assert S.shape == (32, 48)
+    # every entry has magnitude 1/sqrt(m) (Hadamard rows are ±1)
+    np.testing.assert_allclose(np.abs(S), 1.0 / np.sqrt(32), atol=1e-6)
+
+
+def test_sketch_matrix_dispatch_and_unknown():
+    assert sketch_matrix("count", 20, 5, 0).shape == (5, 20)
+    assert sketch_matrix("srht", 20, 5, 0).shape == (5, 20)
+    with pytest.raises(ValueError, match="unknown sketch method"):
+        sketch_matrix("gauss", 20, 5, 0)
+
+
+# ---------------------------------------------------------------------------
+# spectral approximation quality: eigenvalue sandwich at fixed seed
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["count", "srht"])
+def test_eigenvalue_sandwich_tightens_with_sketch_dim(rng, method):
+    """sketch_dim → approximation quality: at fixed seed the eigenvalues
+    of AᵀSᵀSA sandwich those of AᵀA, and the sandwich tightens as the
+    sketch grows (the (1±ε) subspace-embedding picture, ε ~ sqrt(d/m))."""
+    A = _A(rng, 256, 16)
+    ev = np.linalg.eigvalsh(np.asarray(A.T @ A, np.float64))
+
+    def spread(m):
+        Gs = sketched_gram(A, m, method=method, seed=3)
+        ratios = np.linalg.eigvalsh(np.asarray(Gs, np.float64)) / ev
+        return float(ratios.min()), float(ratios.max())
+
+    lo_512, hi_512 = spread(512)
+    assert 0.8 <= lo_512 and hi_512 <= 1.2, (method, lo_512, hi_512)
+    lo_2048, hi_2048 = spread(2048)
+    assert 0.9 <= lo_2048 and hi_2048 <= 1.05, (method, lo_2048, hi_2048)
+    lo_32, hi_32 = spread(32)
+    # the sandwich is strictly tighter at 2048 than at 32 rows
+    assert hi_2048 - lo_2048 < hi_32 - lo_32
+
+
+def test_blocked_plan_gram_sandwiches_true_gram(rng):
+    A = _A(rng, 256, 16)
+    ev = np.linalg.eigvalsh(np.asarray(A.T @ A, np.float64))
+    plan = BlockSketch(256, 8, sketch_dim=512, redundancy=1, seed=3)
+    evs = np.linalg.eigvalsh(np.asarray(plan.gram(A), np.float64))
+    ratios = evs / ev
+    assert 0.8 <= ratios.min() and ratios.max() <= 1.2
+
+
+# ---------------------------------------------------------------------------
+# the block plan: structure + EXACT decode under any s dropped blocks
+# ---------------------------------------------------------------------------
+
+
+def test_plan_block_structure():
+    plan = BlockSketch(100, 8, sketch_dim=30, redundancy=2, seed=0)
+    assert plan.n_blocks == 6
+    assert plan.block_rows == 5            # ceil(30/6)
+    assert plan.blocks_per_task() == 3     # r = s+1
+    # any n_blocks-subset of blocks carries >= sketch_dim rows
+    assert plan.n_blocks * plan.block_rows >= 30
+    # coded task w computes the support of its coding row
+    for w in range(8):
+        np.testing.assert_array_equal(plan.blocks_of_task(w),
+                                      np.nonzero(plan.B[w])[0])
+    uncoded = BlockSketch(100, 8, sketch_dim=30, redundancy=2, coded=False)
+    assert uncoded.blocks_per_task() == 1
+    np.testing.assert_array_equal(uncoded.blocks_of_task(3), [3])
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="redundancy"):
+        BlockSketch(100, 4, sketch_dim=10, redundancy=4)
+    with pytest.raises(ValueError, match="sketch_dim"):
+        BlockSketch(100, 4, sketch_dim=0)
+    with pytest.raises(ValueError, match="unknown sketch method"):
+        BlockSketch(100, 4, sketch_dim=10, method="gauss")
+    plan = BlockSketch(100, 4, sketch_dim=10)
+    with pytest.raises(ValueError, match="expected 4 block values"):
+        plan.encode(np.zeros((5, 3)))
+
+
+@pytest.mark.parametrize("method", ["count", "srht"])
+@pytest.mark.parametrize("W,s", [(6, 1), (8, 2), (7, 2), (5, 0)])
+def test_decoded_gram_exact_under_all_straggler_sets(rng, method, W, s):
+    """The tentpole acceptance property, exhaustively: for EVERY subset
+    of s dropped blocks, decoding the surviving coded messages yields
+    the full-stack sketched Gram (SA)ᵀ(SA) exactly (allclose), NOT an
+    approximation that depends on which blocks arrived."""
+    A = _A(rng)
+    plan = BlockSketch(A.shape[0], W, sketch_dim=24, redundancy=s,
+                       method=method, seed=7)
+    msgs = plan.encode(np.asarray(plan.block_grams(A)).reshape(W, -1))
+    full = np.asarray(plan.gram(A), np.float64)
+    scale = max(np.abs(full).max(), 1.0)
+    for drop in itertools.combinations(range(W), s):
+        resp = np.array([i for i in range(W) if i not in drop])
+        total, n_used = plan.decode_sum(resp, msgs[resp])
+        G = total.astype(np.float64).reshape(A.shape[1], -1) / n_used
+        np.testing.assert_allclose(G / scale, full / scale, atol=2e-4,
+                                   err_msg=f"drop={drop}")
+
+
+@given(st.integers(0, 3).flatmap(
+    lambda s: st.tuples(st.just(s), st.integers(s + 2, s + 7),
+                        st.integers(0, 4))))
+@settings(max_examples=25, deadline=None)
+def test_decode_from_any_subset_property(s_w_seed):
+    """Property form (tests/_hyp.py): random (s, W, seed) plans decode
+    the exact full-stack Gram from a random max-straggler subset."""
+    s, W, seed = s_w_seed
+    rng = np.random.RandomState(seed)
+    A = rng.randn(60, 6).astype(np.float32)
+    plan = BlockSketch(60, W, sketch_dim=12, redundancy=s, seed=seed)
+    msgs = plan.encode(np.asarray(plan.block_grams(A)).reshape(W, -1))
+    full = np.asarray(plan.gram(A), np.float64)
+    drop = rng.choice(W, size=s, replace=False) if s else np.array([], int)
+    resp = np.array(sorted(set(range(W)) - set(int(x) for x in drop)))
+    total, n_used = plan.decode_sum(resp, msgs[resp])
+    G = total.astype(np.float64).reshape(6, 6) / n_used
+    scale = max(np.abs(full).max(), 1.0)
+    np.testing.assert_allclose(G / scale, full / scale, atol=2e-4)
+
+
+def test_coded_decode_insufficient_responders_raises(rng):
+    A = _A(rng)
+    plan = BlockSketch(A.shape[0], 8, sketch_dim=24, redundancy=2, seed=0)
+    msgs = plan.encode(np.asarray(plan.block_grams(A)).reshape(8, -1))
+    resp = np.arange(5)                    # < n_blocks = 6
+    with pytest.raises(ValueError, match="cannot reconstruct"):
+        plan.decode_sum(resp, msgs[resp])
+
+
+def test_uncoded_ignore_extra_blocks(rng):
+    """The uncoded plan sums whatever arrived: an unbiased sketched Gram
+    of >= sketch_dim rows, but subset-DEPENDENT (contrast with coded)."""
+    A = _A(rng)
+    plan = BlockSketch(A.shape[0], 8, sketch_dim=48, redundancy=2,
+                       coded=False, seed=1)
+    assert plan.B is None
+    vals = np.asarray(plan.block_grams(A)).reshape(8, -1)
+    msgs = plan.encode(vals)               # identity
+    np.testing.assert_array_equal(msgs, vals)
+    t1, n1 = plan.decode_sum(np.arange(6), vals[:6])
+    t2, n2 = plan.decode_sum(np.arange(2, 8), vals[2:])
+    assert n1 == n2 == 6
+    G1, G2 = t1.reshape(12, 12) / n1, t2.reshape(12, 12) / n2
+    true = np.asarray(A.T @ A, np.float64)
+    for G in (G1, G2):                     # both valid sketched Grams
+        assert np.abs(G - true).max() / np.abs(true).max() < 0.6
+    assert not np.allclose(G1, G2)         # ...but not the same one
+    with pytest.raises(ValueError, match="ignore-extra-blocks"):
+        plan.decode_sum(np.arange(5), vals[:5])
+
+
+def test_gradient_coding_rides_the_same_code(rng):
+    """The plan's encode/decode is generic over per-block vectors: coding
+    per-block gradient shards through it reconstructs the exact total
+    gradient under drops — this is classic gradient coding reused."""
+    W, s = 6, 2
+    g = rng.randn(W, 10).astype(np.float32)
+    plan = BlockSketch(100, W, sketch_dim=12, redundancy=s, seed=2)
+    msgs = plan.encode(g)
+    for drop in itertools.combinations(range(W), s):
+        resp = np.array([i for i in range(W) if i not in drop])
+        total, _ = plan.decode_sum(resp, msgs[resp])
+        np.testing.assert_allclose(total, g.sum(0), rtol=2e-3, atol=2e-3)
+
+
+def test_frs_vs_cyclic_scheme_selection():
+    """auto picks FRS when (s+1) | W (its decode is the closed-form
+    coefficient-1 fast path), cyclic otherwise."""
+    frs_plan = BlockSketch(8, 8, sketch_dim=16, redundancy=1, seed=0)
+    assert coding._frs_groups(frs_plan.B) is not None
+    cyc_plan = BlockSketch(8, 7, sketch_dim=16, redundancy=1, seed=0)
+    assert coding._frs_groups(cyc_plan.B) is None
+    forced = BlockSketch(8, 8, sketch_dim=16, redundancy=1, scheme="cyclic")
+    assert coding._frs_groups(forced.B) is None
+    with pytest.raises(ValueError, match="unknown coding scheme"):
+        BlockSketch(8, 8, sketch_dim=16, redundancy=1, scheme="reed")
+
+
+def test_apply_block_matches_apply_all(rng):
+    A = _A(rng, 64, 8)
+    for method in ("count", "srht"):
+        plan = BlockSketch(64, 5, sketch_dim=15, redundancy=1,
+                           method=method, seed=9)
+        SA = np.asarray(plan.apply_all(A))
+        for k in range(5):
+            np.testing.assert_allclose(np.asarray(plan.apply_block(k, A)),
+                                       SA[k], atol=1e-5)
