@@ -33,6 +33,10 @@ WORKLOADS = {
     # bench_newton.py (it rejects async_, so it has no cell here)
     "logreg_l2": dict(n_samples=1024, n_features=96, lam2=1e-2,
                       fista=dict(min_iters=1, eps_grad=1e-3)),
+    # the DML cross-fitting fan-out's unit of work (one nuisance lasso);
+    # the full DAG (handoff + combine stage) is bench_phases.py
+    "double_ml": dict(n_samples=768, n_features=24, n_folds=4, fold=0,
+                      target="y", lam1=0.02),
 }
 MODES = ("sync", "drop_slowest", "replicated", "async_")
 FANINS = ("flat", "tree")

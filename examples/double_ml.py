@@ -1,0 +1,61 @@
+"""Double machine learning as a phase-structured (DAG) job.
+
+Estimates the treatment effect theta0 in a partially linear model
+
+    Y = theta0 * D + g0(X) + eps,      D = m0(X) + v
+
+where the confounders X drive BOTH the outcome and the treatment, so
+naively regressing Y on D is biased.  The DML fix is K-fold
+cross-fitting: lasso out both nuisances on each fold's complement,
+residualize out-of-fold, then solve the 1-dim partialling-out score —
+which is exactly a DAG with per-phase parallelism: 2K independent
+medium-size nuisance fits fan OUT (2 workers each), one tiny combine
+stage joins them (1 worker), consuming the fitted coefficients through
+the cluster's ``StageResult`` handoff.  No driver loop: one
+``DagSpec`` through ``api.submit_dag`` and the cluster gates, sizes,
+prices and joins the stages.
+
+Run:  PYTHONPATH=src python examples/double_ml.py
+"""
+from repro import problems
+from repro.api import run_all, submit_dag
+from repro.problems.double_ml import double_ml_dag
+
+N, P, K, THETA = 2048, 32, 4, 1.5
+
+
+def main():
+    dag = double_ml_dag(n_samples=N, n_features=P, n_folds=K,
+                        theta=THETA, confound=0.6, seed=7,
+                        nuisance_workers=2, combine_workers=1,
+                        label="dml")
+    print(f"[double_ml] n={N} p={P} K={K}: {2 * K} nuisance stages "
+          f"(2 workers each) -> 1 combine stage (1 worker)")
+
+    h = submit_dag(dag, tenant="econ")          # one handle, whole DAG
+    run_all()
+
+    # the biased baseline: the SAME combine problem run standalone
+    # (no handoff) keeps zero nuisance coefficients -> naive OLS of Y on D
+    naive = problems.make("double_ml", n_samples=N, n_features=P,
+                          n_folds=K, theta=THETA, confound=0.6, seed=7,
+                          role="combine").closed_form_theta()
+
+    theta_hat = float(h.stage_results["combine"].z[0])
+    print(f"[double_ml] naive OLS        theta = {naive:.4f}   "
+          f"(bias {naive - THETA:+.4f})")
+    print(f"[double_ml] cross-fitted DML theta = {theta_hat:.4f}   "
+          f"(bias {theta_hat - THETA:+.4f})   true = {THETA}")
+
+    print(f"[double_ml] DAG latency {h.latency_s:.1f}s sim, "
+          f"total ${h.total_cost_usd:.4f}; per stage:")
+    for name, row in sorted(h.summary()["stages"].items()):
+        print(f"    {name:10s} rounds={row['rounds']:2d} "
+              f"exec={row['exec_s']:6.2f}s  ${row['cost_usd']:.5f}")
+
+    assert abs(theta_hat - THETA) < abs(naive - THETA), \
+        "cross-fitting failed to reduce the confounding bias"
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,8 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro import problems
-from repro.runtime.cluster import Cluster, ClusterConfig, ClusterResult
+from repro.runtime.cluster import (Cluster, ClusterConfig, ClusterResult,
+                                   DagRun, DagSpec, StageResult, StageSpec)
 from repro.runtime.scheduler import (RoundMetrics, Scheduler,
                                      SchedulerConfig)
 
@@ -224,6 +225,42 @@ def run_all(cluster: Optional[Cluster] = None, on_job_done=None):
             raise RuntimeError("nothing submitted: call api.submit() "
                                "first or pass a Cluster")
     return cluster.run_all(on_job_done=on_job_done)
+
+
+def submit_dag(dag: DagSpec, *, tenant: str = "default", priority: int = 0,
+               deadline_s: Optional[float] = None, at: float = 0.0,
+               problems: Optional[Dict[str, Any]] = None,
+               cluster: Optional[Cluster] = None) -> DagRun:
+    """Queue a phase-structured job — a ``DagSpec`` of named stages with
+    per-stage parallelism — on a cluster (module-default unless given).
+    Root stages queue at ``at``; a downstream stage is *held* until its
+    last predecessor completes, then dispatches with its own
+    ``worker_demand`` and receives the predecessors' ``StageResult``s
+    (``problem.consume_stage_results({name: StageResult})``) if its
+    problem implements the hook.
+
+        dag = DagSpec(stages=(
+            StageSpec("fit_a", spec_a),
+            StageSpec("fit_b", spec_b),
+            StageSpec("combine", spec_c, after=("fit_a", "fit_b")),
+        ))
+        h = submit_dag(dag, tenant="alice")
+        run_all()
+        h.stage_results["combine"].z        # the final stage's solution
+
+    ``ClusterConfig(reservation=...)`` picks what admission reserves:
+    ``"phase"`` (default) holds capacity per RUNNING stage only;
+    ``"peak"`` gang-reserves the DAG's peak level demand for its whole
+    life.  Returns the ``DagRun`` handle (stage results, per-stage cost
+    rollup, DAG latency)."""
+    global _default_cluster
+    if cluster is None:
+        if _default_cluster is None:
+            _default_cluster = Cluster()
+        cluster = _default_cluster
+    return cluster.submit_dag(dag, tenant=tenant, priority=priority,
+                              deadline_s=deadline_s, at=at,
+                              problems=problems)
 
 
 def submit_at(spec: ExperimentSpec, at: float, **kw):

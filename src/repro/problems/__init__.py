@@ -4,7 +4,8 @@
 
     from repro import problems
 
-    problems.available()            # ['lasso', 'logreg', 'softmax', 'svm']
+    problems.available()   # ['double_ml', 'lasso', 'logreg', 'logreg_l2',
+                           #  'newton_sketch', 'softmax', 'svm']
     p = problems.make("lasso", n_samples=4096, n_features=256)
 
     @problems.register("my_workload")     # the ~100-line plugin path
@@ -19,6 +20,7 @@ workload") for the recipe.
 from repro.problems.base import (BatchedShardProblem, FistaShardProblem,
                                  WorkerProblem, as_fista_options, available,
                                  make, register, unregister)
+from repro.problems.double_ml import DoubleMLProblem, double_ml_dag
 from repro.problems.lasso import LassoProblem
 from repro.problems.logreg import LogRegProblem
 from repro.problems.newton_sketch import (LogRegL2Problem,
@@ -31,4 +33,5 @@ __all__ = [
     "register", "unregister", "make", "available", "as_fista_options",
     "LogRegProblem", "LassoProblem", "SVMProblem", "SoftmaxProblem",
     "NewtonSketchProblem", "LogRegL2Problem",
+    "DoubleMLProblem", "double_ml_dag",
 ]

@@ -10,7 +10,11 @@ from repro.runtime.cluster import (
     ClusterConfig,
     ClusterReport,
     ClusterResult,
+    DagRun,
+    DagSpec,
     Job,
+    StageResult,
+    StageSpec,
 )
 from repro.runtime.loadgen import (
     LoadSpec,
@@ -37,5 +41,6 @@ __all__ = [
     "AutoscaleConfig", "Autoscaler",
     "ClusterAutoscaleConfig", "ClusterAutoscaler",
     "Cluster", "ClusterConfig", "ClusterReport", "ClusterResult", "Job",
+    "DagRun", "DagSpec", "StageResult", "StageSpec",
     "LoadSpec", "TraceJob", "TraceWorkload", "generate",
 ]

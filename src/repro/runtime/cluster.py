@@ -57,7 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -69,8 +69,10 @@ from repro.runtime.scheduler import Scheduler
 
 POLICIES = ("fifo", "fair_share", "priority", "deadline")
 ENGINES = ("heap", "scan")
+RESERVATIONS = ("phase", "peak")
 
 QUEUED, RUNNING, DONE, REJECTED = "queued", "running", "done", "rejected"
+HELD = "held"          # DAG stage waiting on predecessors (not yet arrived)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +88,12 @@ class ClusterConfig:
     cold_base_s: float = 2.2      # greedy-dual's saved-latency calibration
     engine: str = "heap"          # heap (O(log jobs)/round) | scan (legacy
     #                               O(jobs)/round reference implementation)
+    reservation: str = "phase"    # DAG admission: "phase" reserves each
+    #                               stage's demand only while it runs;
+    #                               "peak" charges the DAG's peak level
+    #                               demand from first dispatch to DAG
+    #                               completion (gang-style).  Identical
+    #                               for plain single-stage jobs.
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -94,6 +102,229 @@ class ClusterConfig:
         if self.engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {self.engine!r}")
+        if self.reservation not in RESERVATIONS:
+            raise ValueError(f"reservation must be one of {RESERVATIONS}, "
+                             f"got {self.reservation!r}")
+
+
+def spec_worker_demand(spec) -> int:
+    """The capacity admission must RESERVE for a spec: the starting
+    fleet, or the per-job autoscaler's ceiling when the spec enables one
+    (a mid-run rescale() never consults the cluster, so the worst case
+    is budgeted up front)."""
+    auto = spec.scheduler.autoscale
+    if auto.policy != "off":
+        return max(spec.scheduler.n_workers, auto.max_workers)
+    return spec.scheduler.n_workers
+
+
+# ---------------------------------------------------------------------------
+# Phase-structured jobs: a DAG of stages, each with its own parallelism
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One stage of a phase-structured job: an ``ExperimentSpec`` with
+    its own worker demand, gated on the named predecessor stages."""
+    name: str
+    spec: Any                     # repro.api.ExperimentSpec
+    after: Tuple[str, ...] = ()   # predecessor stage names
+
+    def __post_init__(self):
+        object.__setattr__(self, "after", tuple(self.after))
+
+
+@dataclasses.dataclass(frozen=True)
+class DagSpec:
+    """A phase-structured job: named stages + edges.  ``validate()``
+    raises ``ValueError`` on duplicate/unknown stage names or cycles and
+    returns the topological levels (level of a stage = longest
+    predecessor chain); the DAG's *peak demand* is the maximum level-sum
+    of stage worker demands — what ``reservation="peak"`` charges."""
+    stages: Tuple[StageSpec, ...]
+    label: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "stages", tuple(self.stages))
+
+    def validate(self) -> List[List[str]]:
+        if not self.stages:
+            raise ValueError("DagSpec needs at least one stage")
+        names = [s.name for s in self.stages]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate stage name(s) {dup}")
+        known = set(names)
+        for s in self.stages:
+            unknown = [a for a in s.after if a not in known]
+            if unknown:
+                raise ValueError(f"stage {s.name!r} depends on unknown "
+                                 f"stage(s) {unknown}")
+            if s.name in s.after:
+                raise ValueError(f"stage {s.name!r} depends on itself")
+        # Kahn's algorithm, emitting topological levels
+        deps = {s.name: set(s.after) for s in self.stages}
+        levels: List[List[str]] = []
+        remaining = list(names)
+        while remaining:
+            ready = [n for n in remaining if not deps[n]]
+            if not ready:
+                raise ValueError(f"cycle among stages {sorted(remaining)}")
+            levels.append(ready)
+            remaining = [n for n in remaining if n not in ready]
+            for n in remaining:
+                deps[n] -= set(ready)
+        return levels
+
+    def peak_demand(self) -> int:
+        by_name = {s.name: s for s in self.stages}
+        return max(sum(spec_worker_demand(by_name[n].spec) for n in level)
+                   for level in self.validate())
+
+
+@dataclasses.dataclass
+class StageResult:
+    """What a completed stage hands to its dependents: the consensus
+    solution plus the full per-stage ``RunResult`` (trace, dollars,
+    spec) — a dependent stage's problem receives these at dispatch via
+    ``consume_stage_results({name: StageResult, ...})``."""
+    stage: str
+    z: np.ndarray
+    result: Any                   # repro.api.RunResult
+    finished_at: float = 0.0
+
+    @property
+    def cost_usd(self) -> float:
+        return float(self.result.cost_usd)
+
+
+class DagRun:
+    """Runtime state of one submitted DAG: the stage jobs, the
+    dependency counters, the reservation ledger, and the per-stage
+    result/billing rollup.  Returned by ``Cluster.submit_dag`` as the
+    handle (``.stage_results``, ``.summary()``, ``.result_of(name)``)."""
+
+    def __init__(self, dag: DagSpec, *, dag_id: int, tenant: str,
+                 priority: int, deadline_s: Optional[float],
+                 submit_at: float):
+        self.spec = dag
+        self.dag_id = dag_id
+        self.label = dag.label or f"dag{dag_id}"
+        self.tenant = tenant
+        self.priority = priority
+        self.deadline_s = deadline_s
+        self.submit_at = submit_at
+        self.levels = dag.validate()
+        self.peak_demand = dag.peak_demand()
+        self.jobs: Dict[str, "Job"] = {}
+        self.stage_results: Dict[str, StageResult] = {}
+        self.dependents: Dict[str, List[str]] = {s.name: []
+                                                 for s in dag.stages}
+        for s in dag.stages:
+            for pred in s.after:
+                self.dependents[pred].append(s.name)
+        self.state = QUEUED
+        self.reject_reason: Optional[str] = None
+        self.n_unfinished = len(dag.stages)
+        self.active_demand = 0    # summed demand of RUNNING stages
+        self.reserved = 0         # cluster capacity currently charged
+        #                           (peak mode: peak_demand while any
+        #                           stage is unfinished after first
+        #                           dispatch; phase mode: unused)
+
+    # -- lifecycle hooks called by the cluster ------------------------------
+
+    def stage_started(self, job: "Job", reservation: str):
+        self.active_demand += job.worker_demand
+        if reservation == "peak" and not self.reserved:
+            self.reserved = self.peak_demand
+        self.state = RUNNING
+
+    def stage_finished(self, job: "Job", reservation: str
+                       ) -> Tuple[List["Job"], int]:
+        """Record the stage's result, release dependents whose last
+        predecessor this was, and return (released stage jobs, worker
+        reservation freed by this completion)."""
+        self.active_demand -= job.worker_demand
+        self.n_unfinished -= 1
+        self.stage_results[job.stage] = StageResult(
+            stage=job.stage, z=np.asarray(job.result.z), result=job.result,
+            finished_at=job.finished_at)
+        released = []
+        for dep in self.dependents[job.stage]:
+            dj = self.jobs[dep]
+            dj.deps_remaining -= 1
+            if dj.deps_remaining == 0:
+                dj.state = QUEUED
+                dj.submit_at = max(
+                    [dj.submit_at]
+                    + [self.stage_results[p].finished_at
+                       for p in dj.stage_after])
+                released.append(dj)
+        if reservation == "peak":
+            freed = self.reserved if self.n_unfinished == 0 else 0
+            if self.n_unfinished == 0:
+                self.reserved = 0
+        else:
+            freed = job.worker_demand
+        if self.n_unfinished == 0:
+            self.state = DONE
+        return released, freed
+
+    # -- the handle's reporting surface -------------------------------------
+
+    @property
+    def uid(self) -> str:
+        """Unique report key (labels may repeat across submissions)."""
+        return f"{self.dag_id}:{self.label}"
+
+    @property
+    def finished_at(self) -> float:
+        return max((j.finished_at for j in self.jobs.values()
+                    if j.state == DONE), default=0.0)
+
+    @property
+    def latency_s(self) -> float:
+        """DAG submit → last stage completion, in cluster sim time."""
+        return self.finished_at - self.submit_at
+
+    @property
+    def total_cost_usd(self) -> float:
+        return sum(sr.cost_usd for sr in self.stage_results.values())
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        if self.deadline_s is None:
+            return None
+        return bool(self.latency_s <= self.deadline_s)
+
+    def result_of(self, stage: str) -> StageResult:
+        return self.stage_results[stage]
+
+    def summary(self) -> dict:
+        out = {"dag_id": self.dag_id, "label": self.label,
+               "tenant": self.tenant, "state": self.state,
+               "n_stages": len(self.spec.stages),
+               "peak_demand": self.peak_demand,
+               "submit_at": self.submit_at}
+        if self.state == REJECTED:
+            out["reject_reason"] = self.reject_reason
+            return out
+        out.update({
+            "finished_at": float(self.finished_at),
+            "latency_s": float(self.latency_s),
+            "total_cost_usd": float(self.total_cost_usd),
+            "deadline_met": self.deadline_met,
+            "stages": {name: {
+                "latency_s": float(j.latency_s),
+                "exec_s": float(j.exec_s),
+                "rounds": j.rounds,
+                "cost_usd": (float(j.result.cost_usd)
+                             if j.result else None),
+            } for name, j in self.jobs.items() if j.state == DONE},
+        })
+        return out
 
 
 @dataclasses.dataclass
@@ -116,6 +347,11 @@ class Job:
     max_rounds: int = 0
     service_ws: float = 0.0       # worker-seconds consumed (fair share)
     result: Any = None            # repro.api.RunResult
+    # DAG-stage bookkeeping (all None/empty for plain jobs)
+    dag: Optional[DagRun] = None
+    stage: Optional[str] = None
+    stage_after: Tuple[str, ...] = ()
+    deps_remaining: int = 0
 
     @property
     def n_workers(self) -> int:
@@ -127,10 +363,7 @@ class Job:
         the per-job autoscaler's ceiling when the spec enables one — a
         job's mid-run rescale() never consults the cluster, so the
         cluster budgets its worst case up front."""
-        auto = self.spec.scheduler.autoscale
-        if auto.policy != "off":
-            return max(self.spec.scheduler.n_workers, auto.max_workers)
-        return self.spec.scheduler.n_workers
+        return spec_worker_demand(self.spec)
 
     @property
     def latency_s(self) -> float:
@@ -175,6 +408,9 @@ class Job:
             "cost_usd": (self.result.cost_usd if self.result else None),
             "converged": (self.result.converged if self.result else None),
         })
+        if self.dag is not None:
+            out["dag"] = self.dag.label
+            out["stage"] = self.stage
         return out
 
 
@@ -198,6 +434,11 @@ class ClusterReport:
     deadlines_missed: int
     final_worker_cap: int
     rescales: List
+    # phase-structured (DAG) jobs — zeros when none were submitted
+    n_dags: int = 0
+    dag_p50_latency_s: float = 0.0
+    dag_p95_latency_s: float = 0.0
+    dag_cost_usd: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def deadline_attainment(self) -> Optional[float]:
@@ -236,6 +477,7 @@ class Cluster:
         self.autoscaler = (ClusterAutoscaler(cfg.autoscale)
                            if cfg.autoscale.policy != "off" else None)
         self.ledgers: Dict[str, BillingMeter] = {}
+        self._dags: List[DagRun] = []
         self._ran = False
 
     # -- admission ----------------------------------------------------------
@@ -278,6 +520,69 @@ class Cluster:
         self.jobs.append(job)
         return job
 
+    def submit_dag(self, dag: DagSpec, *, tenant: str = "default",
+                   priority: int = 0, deadline_s: Optional[float] = None,
+                   at: float = 0.0, problems: Optional[Dict[str, Any]] = None
+                   ) -> DagRun:
+        """Submit a phase-structured job: every stage becomes a Job,
+        root stages queued at ``at``, downstream stages ``held`` until
+        their last predecessor completes (release re-queues them at that
+        instant).  Validation errors (cycles, unknown refs, duplicates)
+        raise ``ValueError``; a structurally unplaceable DAG — any stage
+        (or, under ``reservation="peak"``, the peak level demand) beyond
+        the cluster's worker ceiling, or an ``async_`` stage — is
+        REJECTED whole.  ``problems`` optionally maps stage name → a
+        pre-built problem instance.  Returns the ``DagRun`` handle."""
+        if self._ran:
+            raise RuntimeError("run_all() already ran — a late submit "
+                               "would be stranded; build a fresh Cluster "
+                               "per batch")
+        run = DagRun(dag, dag_id=len(self._dags), tenant=tenant,
+                     priority=priority, deadline_s=deadline_s,
+                     submit_at=at)       # validates (raises ValueError)
+        cap_ceiling = self.cfg.max_active_workers
+        reason = None
+        for s in dag.stages:
+            if s.spec.scheduler.mode == "async_":
+                reason = (f"stage {s.name!r} is async_ — async jobs pace "
+                          "themselves per-arrival and cannot be "
+                          "round-interleaved; run them via repro.api.run")
+                break
+            if spec_worker_demand(s.spec) > cap_ceiling:
+                reason = (f"stage {s.name!r} needs "
+                          f"{spec_worker_demand(s.spec)} workers (fleet "
+                          f"or per-job autoscale ceiling) but the "
+                          f"cluster caps at {cap_ceiling}")
+                break
+        if (reason is None and self.cfg.reservation == "peak"
+                and run.peak_demand > cap_ceiling):
+            reason = (f"peak level demand {run.peak_demand} exceeds the "
+                      f"cluster cap {cap_ceiling} under "
+                      f'reservation="peak" (use "phase" or shrink the '
+                      "fan-out)")
+        if (reason is None and self.cfg.max_queued is not None
+                and sum(j.state == QUEUED for j in self.jobs)
+                >= self.cfg.max_queued):
+            reason = f"backlog full (max_queued={self.cfg.max_queued})"
+        for s in dag.stages:
+            job = Job(job_id=len(self.jobs), spec=s.spec, tenant=tenant,
+                      priority=priority, submit_at=at,
+                      problem=(problems or {}).get(s.name),
+                      dag=run, stage=s.name, stage_after=s.after,
+                      deps_remaining=len(s.after))
+            if reason is not None:
+                job.state = REJECTED
+                job.reject_reason = reason
+            elif s.after:
+                job.state = HELD
+            run.jobs[s.name] = job
+            self.jobs.append(job)
+        if reason is not None:
+            run.state = REJECTED
+            run.reject_reason = reason
+        self._dags.append(run)
+        return run
+
     # -- the job-scheduling policy -------------------------------------------
 
     def _tenant_service(self) -> Dict[str, float]:
@@ -314,9 +619,36 @@ class Cluster:
     def _reserved_workers(self) -> int:
         """Capacity admission has committed: worst-case demand of every
         running job (>= the live count, so the cap holds even while a
-        per-job autoscaler resizes fleets without asking the cluster)."""
-        return sum(j.worker_demand for j in self.jobs
-                   if j.state == RUNNING)
+        per-job autoscaler resizes fleets without asking the cluster).
+        Under ``reservation="peak"`` a DAG's stages are covered by the
+        DAG-level peak reservation instead of per-stage demand."""
+        total = 0
+        for j in self.jobs:
+            if j.state != RUNNING:
+                continue
+            if j.dag is None or self.cfg.reservation == "phase":
+                total += j.worker_demand
+        if self.cfg.reservation == "peak":
+            total += sum(d.reserved for d in self._dags)
+        return total
+
+    def _admission_delta(self, job: Job) -> int:
+        """Workers this dispatch would ADD to the reserved total: the
+        job's own demand, except a peak-reserved DAG charges its whole
+        peak at the first stage dispatch and 0 for every stage after."""
+        if job.dag is None or self.cfg.reservation == "phase":
+            return job.worker_demand
+        return 0 if job.dag.reserved else job.dag.peak_demand
+
+    def _dag_can_place(self, job: Job) -> bool:
+        """Peak mode's per-DAG budget: concurrently running stages of
+        one DAG may not exceed the reservation the DAG holds (always
+        satisfiable — a single stage's demand never exceeds the peak
+        level sum, so no new deadlock is introduced)."""
+        if job.dag is None or self.cfg.reservation != "peak":
+            return True
+        return (job.dag.active_demand + job.worker_demand
+                <= job.dag.peak_demand)
 
     def _dispatch(self, job: Job, at: float):
         """Build the job's scheduler on a pool backed by the shared
@@ -325,6 +657,12 @@ class Cluster:
         if job.problem is None:
             job.problem = problems.make(job.spec.problem,
                                         **dict(job.spec.problem_kwargs))
+        if job.dag is not None:
+            job.dag.stage_started(job, self.cfg.reservation)
+            inputs = {name: job.dag.stage_results[name]
+                      for name in job.stage_after}
+            if inputs and hasattr(job.problem, "consume_stage_results"):
+                job.problem.consume_stage_results(inputs)
         pool = LambdaPool(job.spec.scheduler.pool,
                           provider=self.provider, tenant=job.tenant)
         job.scheduler = Scheduler(job.problem, job.spec.scheduler,
@@ -342,26 +680,32 @@ class Cluster:
             running = sum(j.state == RUNNING for j in self.jobs)
             if running >= self.cfg.max_concurrent_jobs:
                 return
-            if self._reserved_workers() + job.worker_demand > min(
+            if not self._dag_can_place(job):
+                continue                # its own DAG's budget is busy
+            delta = self._admission_delta(job)
+            if delta and self._reserved_workers() + delta > min(
                     self.worker_cap, self.cfg.max_active_workers):
                 # capacity follows demand: an autoscaled cluster sitting
                 # EMPTY below a placeable job's demand grows to meet it
                 # (the queue-depth policy only shapes the cap under
                 # load; it must never starve the head of the queue)
                 if (running == 0 and self.autoscaler is not None
-                        and job.worker_demand
-                        <= self.cfg.max_active_workers):
+                        and delta <= self.cfg.max_active_workers):
                     old_cap = self.worker_cap
-                    self.worker_cap = max(old_cap, job.worker_demand)
+                    self.worker_cap = max(old_cap, delta)
                     self.autoscaler.decisions.append(
                         (-1, old_cap, self.worker_cap, "demand_grow"))
                 else:
                     continue            # try a smaller job further down
             self._dispatch(job, max(now, job.submit_at))
 
-    def _finish(self, job: Job):
+    def _finish(self, job: Job) -> Tuple[List[Job], int]:
         """Retire the fleet (sandboxes → shared warm pool), build the
-        RunResult, roll the meter into the tenant's ledger."""
+        RunResult, roll the meter into the tenant's ledger.  For a DAG
+        stage, record its StageResult and release dependents whose last
+        predecessor this was.  Returns (released stage jobs, reserved
+        workers freed) — the heap engine needs both; the scan engine
+        recomputes and ignores them."""
         from repro.api import result_from_scheduler     # lazy: no cycle
         sched = job.scheduler
         job.finished_at = sched.sim_time
@@ -374,6 +718,9 @@ class Cluster:
             ledger = self.ledgers[job.tenant] = BillingMeter(
                 sched.meter.cfg)
         ledger.absorb(sched.meter)
+        if job.dag is not None:
+            return job.dag.stage_finished(job, self.cfg.reservation)
+        return [], job.worker_demand
 
     def _observe_autoscale(self, queue_depth: int,
                            active_workers: Optional[int] = None):
@@ -446,7 +793,8 @@ class Cluster:
             self._observe_autoscale(
                 sum(j.state == QUEUED and j.submit_at <= clock
                     for j in self.jobs))
-        return ClusterResult(jobs=list(self.jobs), report=self._report())
+        return ClusterResult(jobs=list(self.jobs), report=self._report(),
+                             dags=list(self._dags))
 
     # -- the event-heap engine ------------------------------------------------
     #
@@ -506,12 +854,16 @@ class Cluster:
         empty-cluster demand_grow branch) + dispatch + counter updates.
         Returns False when the job must stay queued (the scan loop's
         ``continue``: try a smaller job further down)."""
-        if (self._reserved_ws + job.worker_demand
-                > min(self.worker_cap, self.cfg.max_active_workers)):
+        if not self._dag_can_place(job):
+            return False                # its own DAG's budget is busy
+        delta = self._admission_delta(job)
+        if delta and (self._reserved_ws + delta
+                      > min(self.worker_cap,
+                            self.cfg.max_active_workers)):
             if (self._n_running == 0 and self.autoscaler is not None
-                    and job.worker_demand <= self.cfg.max_active_workers):
+                    and delta <= self.cfg.max_active_workers):
                 old_cap = self.worker_cap
-                self.worker_cap = max(old_cap, job.worker_demand)
+                self.worker_cap = max(old_cap, delta)
                 self.autoscaler.decisions.append(
                     (-1, old_cap, self.worker_cap, "demand_grow"))
             else:
@@ -519,7 +871,7 @@ class Cluster:
         self._dispatch(job, max(now, job.submit_at))
         self._n_arrived -= 1
         self._n_running += 1
-        self._reserved_ws += job.worker_demand
+        self._reserved_ws += delta
         live = job.scheduler.cfg.n_workers
         self._live_of[job.job_id] = live
         self._live_ws += live
@@ -627,10 +979,15 @@ class Cluster:
             self._live_of[job.job_id] = live
             clock = max(clock, job.scheduler.sim_time)
             if done or job.rounds >= job.max_rounds:
-                self._finish(job)
+                released, freed = self._finish(job)
                 self._n_running -= 1
-                self._reserved_ws -= job.worker_demand
+                self._reserved_ws -= freed
                 self._live_ws -= self._live_of.pop(job.job_id)
+                # released DAG stages arrive at the predecessor's finish
+                # instant — exactly how the scan loop discovers them
+                for rj in released:
+                    heapq.heappush(self._arrivals,
+                                   (rj.submit_at, rj.job_id, rj))
                 if on_job_done:
                     on_job_done(job)
                 # completion frees capacity AT the job's finish instant
@@ -652,7 +1009,8 @@ class Cluster:
                 self._drain_arrivals(clock)
                 self._observe_autoscale(self._n_arrived,
                                         active_workers=self._live_ws)
-        return ClusterResult(jobs=list(self.jobs), report=self._report())
+        return ClusterResult(jobs=list(self.jobs), report=self._report(),
+                             dags=list(self._dags))
 
     # -- reporting ------------------------------------------------------------
 
@@ -679,6 +1037,9 @@ class Cluster:
                                     if j.tenant == t])) for t in tenants}
         met = sum(1 for j in done if j.deadline_met is True)
         missed = sum(1 for j in done if j.deadline_met is False)
+        dags_done = [d for d in self._dags if d.state == DONE]
+        dag_lats = (np.array([d.latency_s for d in dags_done])
+                    if dags_done else np.zeros(1))
         return ClusterReport(
             policy=self.cfg.policy,
             n_jobs=len(self.jobs),
@@ -699,6 +1060,11 @@ class Cluster:
             final_worker_cap=self.worker_cap,
             rescales=(list(self.autoscaler.decisions)
                       if self.autoscaler else []),
+            n_dags=len(self._dags),
+            dag_p50_latency_s=float(np.percentile(dag_lats, 50)),
+            dag_p95_latency_s=float(np.percentile(dag_lats, 95)),
+            dag_cost_usd={d.uid: float(d.total_cost_usd)
+                          for d in dags_done},
         )
 
 
@@ -708,11 +1074,15 @@ class ClusterResult:
     ``RunResult`` at ``.result``) and the cluster rollup."""
     jobs: List[Job]
     report: ClusterReport
+    dags: List[DagRun] = dataclasses.field(default_factory=list)
 
     def job_results(self) -> List:
         """The per-job RunResults, completed jobs only, submit order."""
         return [j.result for j in self.jobs if j.state == DONE]
 
     def to_dict(self) -> dict:
-        return {"report": self.report.to_dict(),
-                "jobs": [j.summary() for j in self.jobs]}
+        out = {"report": self.report.to_dict(),
+               "jobs": [j.summary() for j in self.jobs]}
+        if self.dags:
+            out["dags"] = [d.summary() for d in self.dags]
+        return out

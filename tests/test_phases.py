@@ -1,0 +1,405 @@
+"""Phase-structured (DAG) jobs: validation, gating, reservation modes,
+stage handoff, and the heap==scan differential on DAG traces.
+
+What this file guards:
+  * ``DagSpec.validate`` — cycles, unknown refs, duplicates, empties are
+    ``ValueError`` at submit, not mid-run surprises;
+  * admission — a stage (or, under ``reservation="peak"``, the peak
+    level demand) beyond the cluster ceiling rejects the WHOLE Dag;
+  * gating — no stage starts before its last predecessor completes, in
+    both engines, and released stages arrive exactly at that instant;
+  * reservation semantics — ``phase`` releases fan-out capacity during
+    narrow stages (beats ``peak`` on makespan), ``peak`` gang-reserves;
+    plain single-stage jobs are byte-identical under both;
+  * the ``StageResult`` handoff — the double_ml combine stage receives
+    the fitted nuisances and the debiased estimate is deterministic;
+  * property (hypothesis): random DAGs keep the gating and capacity
+    invariants and heap == scan fingerprint-for-fingerprint.
+"""
+import numpy as np
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+from repro import api, problems
+from repro.api import ExperimentSpec, submit_dag
+from repro.core.admm import AdmmOptions
+from repro.runtime import (Cluster, ClusterConfig, DagSpec, PoolConfig,
+                           ProviderConfig, SchedulerConfig, StageSpec)
+from repro.runtime.cluster import ENGINES, RESERVATIONS
+
+KW = dict(n_samples=64, n_features=8)
+
+
+def _spec(w=2, rounds=1, seed=0, label=""):
+    return ExperimentSpec(
+        problem="lasso", problem_kwargs=KW,
+        scheduler=SchedulerConfig(
+            n_workers=w, replication=1,
+            admm=AdmmOptions(max_iters=rounds),
+            pool=PoolConfig(seed=seed, provider=ProviderConfig())),
+        max_rounds=rounds, label=label)
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    return problems.make("lasso", **KW)
+
+
+def _stage_problems(dag, problem):
+    """Share one cached problem instance across every lasso stage."""
+    return {s.name: problem for s in dag.stages}
+
+
+def _diamond(w_fan=4, w_join=1, rounds=1, join_rounds=None):
+    """a -> (b, c) -> d : one fan-out level of width 2."""
+    return DagSpec(stages=(
+        StageSpec("a", _spec(w_join, rounds, seed=1, label="a")),
+        StageSpec("b", _spec(w_fan, rounds, seed=2, label="b"),
+                  after=("a",)),
+        StageSpec("c", _spec(w_fan, rounds, seed=3, label="c"),
+                  after=("a",)),
+        StageSpec("d", _spec(w_join, join_rounds or rounds, seed=4,
+                             label="d"),
+                  after=("b", "c")),
+    ), label="diamond")
+
+
+def _fingerprint(res):
+    return (res.report.to_dict(),
+            [j.summary() for j in sorted(res.jobs, key=lambda j: j.job_id)])
+
+
+# ---------------------------------------------------------------------------
+# DagSpec validation
+# ---------------------------------------------------------------------------
+
+
+def test_empty_dag_rejected():
+    with pytest.raises(ValueError, match="at least one stage"):
+        DagSpec(stages=()).validate()
+
+
+def test_duplicate_stage_name_rejected():
+    dag = DagSpec(stages=(StageSpec("a", _spec()), StageSpec("a", _spec())))
+    with pytest.raises(ValueError, match="duplicate"):
+        dag.validate()
+
+
+def test_unknown_predecessor_rejected():
+    dag = DagSpec(stages=(StageSpec("a", _spec(), after=("ghost",)),))
+    with pytest.raises(ValueError, match="unknown"):
+        dag.validate()
+
+
+def test_self_dependency_rejected():
+    dag = DagSpec(stages=(StageSpec("a", _spec(), after=("a",)),))
+    with pytest.raises(ValueError, match="itself"):
+        dag.validate()
+
+
+def test_cycle_rejected():
+    dag = DagSpec(stages=(
+        StageSpec("a", _spec(), after=("b",)),
+        StageSpec("b", _spec(), after=("a",)),
+    ))
+    with pytest.raises(ValueError, match="cycle"):
+        dag.validate()
+
+
+def test_levels_and_peak_demand():
+    dag = _diamond(w_fan=4, w_join=1)
+    assert dag.validate() == [["a"], ["b", "c"], ["d"]]
+    assert dag.peak_demand() == 8        # the fan-out level: 4 + 4
+
+
+def test_invalid_reservation_rejected():
+    with pytest.raises(ValueError, match="reservation"):
+        ClusterConfig(reservation="both")
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+
+def test_stage_demand_over_cap_rejects_whole_dag(lasso):
+    c = Cluster(ClusterConfig(max_active_workers=3))
+    dag = _diamond(w_fan=4)
+    h = c.submit_dag(dag, problems=_stage_problems(dag, lasso))
+    assert h.state == "rejected"
+    assert "caps at 3" in h.reject_reason
+    assert all(j.state == "rejected" for j in h.jobs.values())
+    res = c.run_all()                    # an all-rejected batch still runs
+    assert res.report.n_rejected == 4
+
+
+def test_peak_over_cap_rejected_only_in_peak_mode(lasso):
+    dag = _diamond(w_fan=4)              # peak 8, widest single stage 4
+    probs = _stage_problems(dag, lasso)
+    h = Cluster(ClusterConfig(max_active_workers=6, reservation="peak")
+                ).submit_dag(dag, problems=probs)
+    assert h.state == "rejected" and "peak level demand" in h.reject_reason
+    c = Cluster(ClusterConfig(max_active_workers=6, reservation="phase"))
+    h2 = c.submit_dag(dag, problems=probs)
+    assert h2.state == "queued"
+    c.run_all()
+    assert h2.state == "done"
+
+
+def test_async_stage_rejects_whole_dag(lasso):
+    bad = ExperimentSpec(problem="lasso", problem_kwargs=KW,
+                         scheduler=SchedulerConfig(n_workers=2,
+                                                   replication=1,
+                                                   mode="async_"))
+    dag = DagSpec(stages=(StageSpec("a", _spec()),
+                          StageSpec("b", bad, after=("a",))))
+    h = Cluster(ClusterConfig()).submit_dag(dag)
+    assert h.state == "rejected" and "async" in h.reject_reason
+
+
+def test_submit_dag_after_run_all_raises(lasso):
+    c = Cluster(ClusterConfig())
+    dag = _diamond()
+    c.submit_dag(dag, problems=_stage_problems(dag, lasso))
+    c.run_all()
+    with pytest.raises(RuntimeError, match="already ran"):
+        c.submit_dag(_diamond())
+
+
+# ---------------------------------------------------------------------------
+# gating + reservation semantics
+# ---------------------------------------------------------------------------
+
+
+def _run_dags(engine, reservation, problem, *, n_dags=2, w_fan=4, cap=8,
+              slots=6, gap=1.0, join_rounds=None):
+    c = Cluster(ClusterConfig(engine=engine, reservation=reservation,
+                              max_concurrent_jobs=slots,
+                              max_active_workers=cap))
+    handles = []
+    for i in range(n_dags):
+        dag = _diamond(w_fan=w_fan, join_rounds=join_rounds)
+        handles.append(c.submit_dag(dag, tenant=f"t{i}", at=gap * i,
+                                    problems=_stage_problems(dag, problem)))
+    return c, handles, c.run_all()
+
+
+def test_no_stage_starts_before_predecessors(lasso):
+    for engine in ENGINES:
+        _, handles, _ = _run_dags(engine, "phase", lasso)
+        for h in handles:
+            assert h.state == "done"
+            for s in h.spec.stages:
+                j = h.jobs[s.name]
+                for pred in s.after:
+                    assert j.started_at >= h.jobs[pred].finished_at
+
+
+def test_held_stages_not_visible_to_admission(lasso):
+    c = Cluster(ClusterConfig())
+    dag = _diamond()
+    h = c.submit_dag(dag, problems=_stage_problems(dag, lasso))
+    assert h.jobs["a"].state == "queued"
+    assert all(h.jobs[n].state == "held" for n in ("b", "c", "d"))
+
+
+def test_phase_beats_peak_makespan_and_p50(lasso):
+    """With the cap equal to one DAG's peak and a bursty staggered
+    stream (long narrow join after a wide fan-out), peak-reservation
+    serializes the DAGs — each holds 8 reserved workers while 1 runs
+    its join — while phase overlaps the next DAG's fan-out with the
+    current join: better makespan AND better DAG p50."""
+    kw = dict(n_dags=4, gap=2.0, join_rounds=3)
+    _, _, phase = _run_dags("heap", "phase", lasso, **kw)
+    _, peaks, peak = _run_dags("heap", "peak", lasso, **kw)
+    assert phase.report.makespan_s < peak.report.makespan_s
+    assert phase.report.dag_p50_latency_s < peak.report.dag_p50_latency_s
+    # peak mode: while DAG 0 holds its reservation, DAG 1 cannot start
+    assert (peaks[1].jobs["a"].started_at
+            >= peaks[0].jobs["d"].finished_at)
+
+
+def test_plain_jobs_byte_identical_across_reservations(lasso):
+    """reservation= only branches for DAG jobs: a plain single-stage
+    batch produces the SAME schedule under phase, peak, and both
+    engines (the all-23-pins-unchanged guarantee, in miniature)."""
+    fps = []
+    for engine in ENGINES:
+        for reservation in RESERVATIONS:
+            c = Cluster(ClusterConfig(engine=engine,
+                                      reservation=reservation,
+                                      max_concurrent_jobs=2,
+                                      max_active_workers=6))
+            for i in range(6):
+                c.submit(_spec(w=2 + 2 * (i % 2), seed=i, label=f"j{i}"),
+                         tenant=f"t{i % 2}", at=float(i),
+                         problem=lasso)
+            fps.append(_fingerprint(c.run_all()))
+    assert all(fp == fps[0] for fp in fps[1:])
+
+
+def test_heap_matches_scan_on_dag_traces(lasso):
+    for reservation in RESERVATIONS:
+        fps = [_fingerprint(_run_dags(e, reservation, lasso)[2])
+               for e in ENGINES]
+        assert fps[0] == fps[1], reservation
+
+
+def test_billing_rollup_and_report(lasso):
+    _, handles, res = _run_dags("heap", "phase", lasso)
+    rep = res.report
+    assert rep.n_dags == 2
+    assert rep.dag_p95_latency_s >= rep.dag_p50_latency_s > 0
+    for h in handles:
+        s = h.summary()
+        assert set(s["stages"]) == {"a", "b", "c", "d"}
+        stage_total = sum(v["cost_usd"] for v in s["stages"].values())
+        assert stage_total == pytest.approx(h.total_cost_usd)
+        assert rep.dag_cost_usd[h.uid] == pytest.approx(
+            h.total_cost_usd)
+    d = res.to_dict()
+    assert len(d["dags"]) == 2
+    assert "dag_p50_latency_s" in d["report"]
+
+
+def test_mixed_plain_and_dag_batch(lasso):
+    """Plain jobs and DAG stages interleave in one batch; both engines
+    agree and every job completes."""
+    fps = []
+    for engine in ENGINES:
+        c = Cluster(ClusterConfig(engine=engine, max_concurrent_jobs=3,
+                                  max_active_workers=8))
+        c.submit(_spec(w=2, seed=50, label="plain0"), tenant="p",
+                 problem=lasso)
+        dag = _diamond()
+        c.submit_dag(dag, tenant="q", at=0.5,
+                     problems=_stage_problems(dag, lasso))
+        c.submit(_spec(w=4, seed=51, label="plain1"), tenant="p", at=1.0,
+                 problem=lasso)
+        res = c.run_all()
+        assert all(j.state == "done" for j in res.jobs)
+        fps.append(_fingerprint(res))
+    assert fps[0] == fps[1]
+
+
+# ---------------------------------------------------------------------------
+# the StageResult handoff (double_ml end to end)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_dml_dag(seed=5):
+    return problems.double_ml_dag(n_samples=256, n_features=12, n_folds=2,
+                                  theta=1.5, seed=seed,
+                                  nuisance_workers=2, combine_workers=1,
+                                  nuisance_rounds=3, combine_rounds=3)
+
+
+def _run_dml(engine):
+    c = Cluster(ClusterConfig(engine=engine, max_concurrent_jobs=4,
+                              max_active_workers=8))
+    h = api.submit_dag(_tiny_dml_dag(), cluster=c, tenant="alice")
+    c.run_all()
+    return h
+
+
+def test_dml_handoff_feeds_combine():
+    h = _run_dml("heap")
+    assert h.state == "done"
+    combine = h.jobs["combine"]
+    # the combine problem received every nuisance beta (nonzero rows)
+    for t in ("y", "d"):
+        assert np.all(np.abs(combine.problem._beta[t]).sum(axis=1) > 0)
+    theta = float(h.stage_results["combine"].z[0])
+    # ADMM converged to the closed-form partialling-out estimate
+    assert theta == pytest.approx(combine.problem.closed_form_theta(),
+                                  abs=1e-3)
+
+
+def test_dml_debiases_the_naive_estimate():
+    h = _run_dml("heap")
+    theta = float(h.stage_results["combine"].z[0])
+    naive = problems.make(
+        "double_ml", role="combine", n_samples=256, n_features=12,
+        n_folds=2, theta=1.5, seed=5).closed_form_theta()
+    assert abs(theta - 1.5) < abs(naive - 1.5)
+
+
+def test_dml_handoff_is_deterministic():
+    thetas = [float(_run_dml(e).stage_results["combine"].z[0])
+              for e in ("heap", "heap", "scan")]
+    assert thetas[0] == thetas[1] == thetas[2]
+
+
+def test_dml_kwarg_validation():
+    with pytest.raises(ValueError, match="role"):
+        problems.make("double_ml", role="other")
+    with pytest.raises(ValueError, match="target"):
+        problems.make("double_ml", target="z")
+    with pytest.raises(ValueError, match="fold"):
+        problems.make("double_ml", fold=4, n_folds=4)
+    with pytest.raises(ValueError, match="n_folds"):
+        problems.make("double_ml", n_folds=1)
+    with pytest.raises(RuntimeError, match="combine"):
+        problems.make("double_ml").consume_stage_results({})
+
+
+# ---------------------------------------------------------------------------
+# property: random DAGs keep the invariants, heap == scan
+# ---------------------------------------------------------------------------
+
+
+def _random_dag(edges_seed, demands):
+    """Forward-edge DAG over len(demands) stages: stage j depends on
+    stage i<j iff bit i of edges_seed//(2**...) — cheap determinism."""
+    rng = np.random.default_rng(edges_seed)
+    stages = []
+    for j, w in enumerate(demands):
+        after = tuple(f"s{i}" for i in range(j) if rng.random() < 0.4)
+        stages.append(StageSpec(f"s{j}", _spec(w=w, seed=30 + j,
+                                               label=f"s{j}"),
+                                after=after))
+    return DagSpec(stages=tuple(stages), label=f"rand{edges_seed}")
+
+
+@given(st.integers(min_value=0, max_value=10_000),
+       st.lists(st.sampled_from([1, 2, 4]), min_size=2, max_size=5),
+       st.sampled_from(list(RESERVATIONS)))
+@settings(max_examples=5, deadline=None)
+def test_random_dags_heap_scan_and_invariants(edges_seed, demands,
+                                              reservation):
+    prob = problems.make("lasso", **KW)
+    dag = _random_dag(edges_seed, demands)
+    cap = 6
+    fps, handles = [], []
+    for engine in ENGINES:
+        c = Cluster(ClusterConfig(engine=engine, reservation=reservation,
+                                  max_concurrent_jobs=4,
+                                  max_active_workers=cap))
+        h = c.submit_dag(dag, problems=_stage_problems(dag, prob))
+        if h.state == "rejected":       # peak demand can exceed the cap
+            assert reservation == "peak"
+            return
+        res = c.run_all()
+        fps.append(_fingerprint(res))
+        handles.append(h)
+    assert fps[0] == fps[1]
+    h = handles[0]
+    jobs = list(h.jobs.values())
+    # gating: no stage starts before its last predecessor completes
+    for s in dag.stages:
+        for pred in s.after:
+            assert (h.jobs[s.name].started_at
+                    >= h.jobs[pred].finished_at)
+    # capacity: at every dispatch instant the reserved total (phase:
+    # running stages' demand; peak: the DAG's charged reservation)
+    # never exceeds the cap
+    for j in jobs:
+        t = j.started_at
+        if reservation == "phase":
+            reserved = sum(k.worker_demand for k in jobs
+                           if k.started_at <= t < k.finished_at)
+        else:
+            first = min(k.started_at for k in jobs)
+            last = max(k.finished_at for k in jobs)
+            reserved = h.peak_demand if first <= t < last else 0
+        assert reserved <= cap

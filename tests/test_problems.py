@@ -31,6 +31,10 @@ SMALL = {
     "lasso": dict(n_samples=512, n_features=48),
     "svm": dict(n_samples=512, n_features=48, density=0.1),
     "softmax": dict(n_samples=384, n_features=16, n_classes=4),
+    # the nuisance role is the FISTA/prox workload; the combine role's
+    # extra surface (handoff, residual shards) is tests/test_phases.py
+    "double_ml": dict(n_samples=512, n_features=24, n_folds=4, fold=1,
+                      target="y", lam1=0.02),
 }
 NAMES = sorted(SMALL)
 
@@ -39,7 +43,8 @@ def test_builtin_registry_is_covered():
     """Every built-in workload has a SMALL instance in this suite (a new
     registered workload must add one to be conformance-tested)."""
     assert set(problems.available()) >= set(NAMES)
-    builtin = {"logreg", "logreg_l2", "lasso", "svm", "softmax"}
+    builtin = {"logreg", "logreg_l2", "lasso", "svm", "softmax",
+               "double_ml"}
     assert builtin <= set(NAMES)
 
 
