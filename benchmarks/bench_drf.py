@@ -1,0 +1,184 @@
+"""DRF fairness vs scalar fair_share, and class-aware placement Pareto.
+
+Two claims the multi-resource layer (``runtime/placement.py``) makes,
+each reduced to a pinned head-to-head:
+
+1. **Fairness under shaped demand.**  ``fair_share`` meters ONE number
+   (accumulated worker-seconds), so when tenant demand shapes differ —
+   a memory-heavy lasso tenant (W=1 fleets holding 10 GB sandboxes,
+   accruing just 1 worker-second per second) next to worker-heavy
+   softmax tenants (W=8 fleets of 1.5 GB sandboxes, accruing 8x
+   faster) — the scalar systematically under-counts the memory tenant:
+   it always looks least-served, keeps winning the dispatch, and
+   STACKS concurrent jobs until memory saturates while its
+   worker-second tally barely moves.  ``policy="drf"`` orders tenants
+   by DOMINANT share (max over workers / memory / egress — the Mesos
+   sorter semantics), which counts the stacking the moment it happens.
+   The report's ``vector_fairness_ratio`` — the time-average of the
+   instantaneous max/min dominant share across allocated tenants, the
+   imbalance DRF's serve-the-lowest rule bounds at every dispatch —
+   must come out strictly LOWER under drf than under fair_share on the
+   identical submission stream.
+
+2. **Heterogeneous placement Pareto.**  With 2–3 instance classes
+   (1769/3008/10240 MB at distinct $/GB-s and cold-start latencies,
+   each with its own warm pool), ``cost_latency`` placement lands each
+   job on the cheapest tier that fits it instead of renting the big
+   tier for everyone.  Against the one-size baseline (every job on the
+   10 GB class) over a mixed 1.5/2.5/9 GB-per-sandbox stream, class-
+   aware placement must Pareto-dominate: strictly cheaper total $ AND
+   no worse p50 job latency.
+
+Emits experiments/bench_drf.json; the four headline numbers (both
+policies' fairness ratios, both placements' cost and p50) are pinned in
+benchmarks/baselines/baselines.json via check_regression.py.
+"""
+from benchmarks.common import emit
+from repro import problems
+from repro.api import ExperimentSpec
+from repro.core.admm import AdmmOptions
+from repro.runtime import (BillingConfig, ClusterConfig, PlacementConfig,
+                           PoolConfig, ProviderConfig, SchedulerConfig)
+from repro.runtime.cluster import Cluster
+
+# reduced instances; one per demand shape, shared across every run so
+# shard generation and jit compilation amortize
+WORKLOADS = {
+    "lasso": dict(n_samples=256, n_features=32),
+    "softmax": dict(n_samples=128, n_features=8, n_classes=3),
+}
+
+# the two demand shapes of experiment 1: one memory-dominant tenant
+# (dominant share 10/40 GB per job, 1 worker-second/s accrual) against
+# three worker-dominant tenants (8/24 workers per job, 8 ws/s accrual)
+MEM_SHAPE = dict(problem="lasso", w=1, mem_gb=10.0)     # memory-heavy
+CPU_SHAPE = dict(problem="softmax", w=8, mem_gb=1.5)    # worker-heavy
+N_MEM_JOBS, MEM_ROUNDS = 9, 8     # deep small-fleet backlog
+CPU_TENANTS = ("cpu0", "cpu1", "cpu2")
+N_CPU_JOBS, CPU_ROUNDS = 3, 5     # few wide-fleet jobs each
+
+
+def _spec(shape, seed, rounds):
+    return ExperimentSpec(
+        problem=shape["problem"], problem_kwargs=WORKLOADS[shape["problem"]],
+        scheduler=SchedulerConfig(
+            n_workers=shape["w"],
+            # eps pinned tiny: every job runs exactly its round budget,
+            # so durations (hence contention) are structural, not a
+            # function of convergence luck
+            admm=AdmmOptions(max_iters=rounds, eps_primal=1e-12,
+                             eps_dual=1e-12),
+            billing=BillingConfig(mem_gb=shape["mem_gb"]),
+            pool=PoolConfig(seed=seed,
+                            provider=ProviderConfig(enabled=True))),
+        max_rounds=rounds,
+        label=f"{shape['problem']}/w{shape['w']}/m{shape['mem_gb']:g}")
+
+
+def run_fairness(probs, policy: str):
+    """The shaped-tenant stream under one policy.  ``vector_capacity``
+    keeps the fair_share run on the SAME multi-resource admission (and
+    the same fairness accounting) as the drf run — only the dispatch
+    ORDER differs between the two."""
+    cluster = Cluster(ClusterConfig(
+        policy=policy, vector_capacity=True,
+        max_concurrent_jobs=6, max_active_workers=24,
+        mem_capacity_gb=40.0))
+    backlog = {"mem": [(MEM_SHAPE, MEM_ROUNDS)] * N_MEM_JOBS}
+    for t in CPU_TENANTS:
+        backlog[t] = [(CPU_SHAPE, CPU_ROUNDS)] * N_CPU_JOBS
+    i = 0
+    # round-robin interleave so every tenant's backlog spans the run
+    while any(backlog.values()):
+        for tenant in ("mem", "cpu0", "mem", "cpu1", "mem", "cpu2"):
+            if backlog.get(tenant):
+                shape, rounds = backlog[tenant].pop(0)
+                cluster.submit(_spec(shape, 200 + i, rounds), tenant=tenant,
+                               at=0.1 * i, problem=probs[shape["problem"]])
+                i += 1
+    return cluster.run_all().report
+
+
+# experiment 2: mixed per-sandbox memory stream over the class tiers
+# (1.5 fits s1769, 2.5 fits m3008, 9.0 only fits l10240)
+PLACE_SHAPES = (
+    dict(problem="softmax", w=4, mem_gb=1.5),
+    dict(problem="lasso", w=4, mem_gb=2.5),
+    dict(problem="lasso", w=2, mem_gb=9.0),
+)
+N_PLACE_JOBS = 12
+PLACE_ROUNDS = 6
+
+
+def run_placement(probs, *, one_size: bool):
+    cfg = PlacementConfig(enabled=True, policy="cost_latency")
+    if one_size:
+        big = max(cfg.classes, key=lambda k: k.mem_mb)
+        cfg = PlacementConfig(enabled=True, policy="cost_latency",
+                              classes=(big,))
+    cluster = Cluster(ClusterConfig(
+        policy="fifo", max_concurrent_jobs=3, max_active_workers=12,
+        placement=cfg))
+    for i in range(N_PLACE_JOBS):
+        shape = PLACE_SHAPES[i % len(PLACE_SHAPES)]
+        cluster.submit(_spec(shape, 300 + i, PLACE_ROUNDS),
+                       tenant=f"t{i % 2}",
+                       at=0.5 * i, problem=probs[shape["problem"]])
+    return cluster.run_all().report
+
+
+def main():
+    probs = {name: problems.make(name, **kw)
+             for name, kw in WORKLOADS.items()}
+
+    n_fair = N_MEM_JOBS + len(CPU_TENANTS) * N_CPU_JOBS
+    print(f"[bench_drf] fairness: {n_fair} jobs, 1 memory-heavy tenant "
+          f"(stacking W=1/10GB) vs {len(CPU_TENANTS)} worker-heavy "
+          f"tenants (W=8/1.5GB), capacity 24 workers / 40 GB")
+    fair = {}
+    for policy in ("fair_share", "drf"):
+        rep = run_fairness(probs, policy)
+        fair[policy] = rep
+        shares = " ".join(f"{t}={s:.3f}"
+                          for t, s in rep.tenant_dominant_share.items())
+        print(f"  {policy:10s} vector_fairness_ratio="
+              f"{rep.vector_fairness_ratio:.3f}  [{shares}]")
+    fair_win = (fair["drf"].vector_fairness_ratio
+                < fair["fair_share"].vector_fairness_ratio)
+    print(f"[bench_drf] drf bounds the dominant-share spread: "
+          f"{fair['drf'].vector_fairness_ratio:.3f} vs fair_share "
+          f"{fair['fair_share'].vector_fairness_ratio:.3f} "
+          f"{'OK' if fair_win else 'REGRESSION'}")
+
+    print(f"[bench_drf] placement: {N_PLACE_JOBS} jobs across "
+          f"1.5/2.5/9 GB sandboxes — class-aware vs one-size(10GB)")
+    aware = run_placement(probs, one_size=False)
+    one = run_placement(probs, one_size=True)
+    for label, rep in (("class_aware", aware), ("one_size", one)):
+        mix = " ".join(f"{n}={c}" for n, c in rep.class_jobs.items())
+        print(f"  {label:12s} cost=${rep.total_cost_usd:.4f} "
+              f"p50={rep.p50_latency_s:6.2f}s warm={rep.warm_hit_rate:5.1%} "
+              f"[{mix}]")
+    pareto_win = (aware.total_cost_usd < one.total_cost_usd
+                  and aware.p50_latency_s <= one.p50_latency_s)
+    print(f"[bench_drf] class-aware Pareto-dominates one-size: "
+          f"${aware.total_cost_usd:.4f}/{aware.p50_latency_s:.2f}s vs "
+          f"${one.total_cost_usd:.4f}/{one.p50_latency_s:.2f}s "
+          f"{'OK' if pareto_win else 'REGRESSION'}")
+
+    emit("bench_drf", {
+        "fairness": {p: r.to_dict() for p, r in fair.items()},
+        "placement": {"class_aware": aware.to_dict(),
+                      "one_size": one.to_dict()},
+        "checks": {
+            "drf_bounds_dominant_share_spread": bool(fair_win),
+            "class_aware_pareto_dominates": bool(pareto_win),
+        },
+    })
+    if not (fair_win and pareto_win):
+        raise SystemExit("bench_drf acceptance checks FAILED")
+    return fair, aware, one
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,19 @@ SPEC = [
     # 112/128, exact by construction (no TTL or capacity pressure at
     # this scale), so any drift means the leasing/retire path changed
     ("bench_cluster.json", "shared.warm_hit_rate", 0.0),
+    # DRF fairness + class-aware placement (bench_drf): the drf policy's
+    # time-averaged instantaneous dominant-share imbalance must stay
+    # strictly below fair_share's on the shaped-tenant stream (the
+    # strict inequality itself is bench_drf's own acceptance check;
+    # these pins catch silent drift in EITHER number), and class-aware
+    # placement's cost/latency Pareto corner vs the one-size 10 GB
+    # baseline is a deterministic function of the class constants
+    ("bench_drf.json", "fairness.drf.vector_fairness_ratio", 0.05),
+    ("bench_drf.json", "fairness.fair_share.vector_fairness_ratio", 0.05),
+    ("bench_drf.json", "placement.class_aware.total_cost_usd", 0.05),
+    ("bench_drf.json", "placement.class_aware.p50_latency_s", 0.05),
+    ("bench_drf.json", "placement.one_size.total_cost_usd", 0.05),
+    ("bench_drf.json", "placement.one_size.p50_latency_s", 0.05),
     # production-load trace (bench_load --smoke): the 1000-job Poisson
     # trace through the event-heap engine.  Templates never converge
     # early (eps=1e-12), so completion count and round totals are pure

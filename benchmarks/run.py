@@ -24,11 +24,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_admm_vs_sgd, bench_cluster,
-                            bench_compression, bench_cost, bench_kernels,
-                            bench_load, bench_newton, bench_phases,
-                            bench_scale, bench_workloads, fig3_convergence,
-                            fig4_speedup, fig67_histograms, fig8_coldstart,
-                            roofline)
+                            bench_compression, bench_cost, bench_drf,
+                            bench_kernels, bench_load, bench_newton,
+                            bench_phases, bench_scale, bench_workloads,
+                            fig3_convergence, fig4_speedup,
+                            fig67_histograms, fig8_coldstart, roofline)
 
     jobs = [
         ("kernels", lambda: bench_kernels.main()),
@@ -39,6 +39,7 @@ def main(argv=None) -> None:
         ("compression", lambda: bench_compression.main()),
         ("bench_cost", lambda: bench_cost.main()),
         ("bench_cluster", lambda: bench_cluster.main()),
+        ("bench_drf", lambda: bench_drf.main()),
         ("bench_phases", lambda: bench_phases.main()),
         # the default pass runs the ~1k-job smoke trace; --paper replays
         # the full 10k-job Azure-model trace (minutes, not seconds)

@@ -263,6 +263,19 @@ def submit_dag(dag: DagSpec, *, tenant: str = "default", priority: int = 0,
                               problems=problems)
 
 
+def demand(spec: ExperimentSpec) -> Dict[str, float]:
+    """The multi-resource demand a spec presents to a cluster — the
+    ``(workers, mem_gb, egress_mbps)`` vector DRF admission and
+    class-aware placement reason about (``runtime.placement``).  Useful
+    for sizing ``ClusterConfig(mem_capacity_gb=..., egress_capacity_mbps
+    =...)`` before submitting:
+
+        api.demand(spec)   # {'workers': 8.0, 'mem_gb': 24.0, ...}
+    """
+    from repro.runtime.placement import spec_resource_vector
+    return spec_resource_vector(spec).to_dict()
+
+
 def submit_at(spec: ExperimentSpec, at: float, **kw):
     """``submit`` with the arrival instant as a positional: the natural
     verb for trace-driven load, where every submission carries its

@@ -22,8 +22,23 @@ from repro.runtime.loadgen import (
     TraceWorkload,
     generate,
 )
+from repro.runtime.placement import (
+    DRFSorter,
+    PlacementConfig,
+    ResourceVector,
+    choose_class,
+    spec_resource_vector,
+    spec_worker_demand,
+)
 from repro.runtime.pool import LambdaPool, PoolConfig, SimWorker
-from repro.runtime.provider import Provider, ProviderConfig, WarmContainer
+from repro.runtime.provider import (
+    DEFAULT_CLASSES,
+    ClassedProvider,
+    InstanceClass,
+    Provider,
+    ProviderConfig,
+    WarmContainer,
+)
 from repro.runtime.reduce import TreeConfig, fanin_drain, tree_drain
 from repro.runtime.scheduler import (
     LogRegProblem,
@@ -37,6 +52,9 @@ __all__ = [
     "LogRegProblem", "Scheduler", "SchedulerConfig", "RoundMetrics",
     "TreeConfig", "fanin_drain", "tree_drain",
     "Provider", "ProviderConfig", "WarmContainer",
+    "InstanceClass", "DEFAULT_CLASSES", "ClassedProvider",
+    "ResourceVector", "spec_resource_vector", "spec_worker_demand",
+    "DRFSorter", "PlacementConfig", "choose_class",
     "BillingConfig", "BillingMeter", "CostBreakdown",
     "AutoscaleConfig", "Autoscaler",
     "ClusterAutoscaleConfig", "ClusterAutoscaler",

@@ -152,6 +152,16 @@ class ClusterAutoscaleConfig:
     grow_at_depth: int = 2        # queued jobs that trigger growth
     shrink_at_depth: int = 0      # queue depth at/below which to shrink
     cooldown_events: int = 4      # min observations between resizes
+    # Vector (multi-resource) clusters only: count a queued job toward
+    # the demand signal ONLY when workers are what blocks it (its
+    # memory/egress demand fits the free vector capacity).  Without
+    # this, a memory-saturated but worker-idle cluster reads its whole
+    # backlog as worker demand and grows capacity that cannot admit
+    # anything — the latent single-resource assumption of the original
+    # controller.  Inert outside vector mode (scalar clusters have no
+    # other resource to be blocked on), so pre-vector traces are
+    # byte-identical.
+    blocked_only: bool = True
     tick_s: float = 0.0           # heap engine: observe on periodic sim-time
     #                               ticks instead of after every job round
     #                               (0 = legacy per-round observation; the

@@ -22,10 +22,21 @@ id, priority, optional deadline) and interleaves their scheduler rounds
   ``max_queued``.  Admitted jobs wait in the queue until worker
   capacity and a job slot free up.
 * **Job scheduling policy** — ``fifo`` (submission order),
-  ``priority`` (higher first), ``deadline`` (earliest first), or
+  ``priority`` (higher first), ``deadline`` (earliest first),
   ``fair_share`` (least-served tenant first, by accumulated
-  worker-seconds) decides which queued job dispatches when capacity
-  frees.
+  worker-seconds), or ``drf`` (Dominant Resource Fairness: least
+  dominant share of the (workers, mem_gb, egress_mbps) demand vector
+  first — the Mesos sorter semantics, ``runtime/placement.py``)
+  decides which queued job dispatches when capacity frees.
+* **Vector capacity & heterogeneous placement** — ``policy="drf"`` or
+  ``vector_capacity=True`` turns admission multi-dimensional (memory
+  and egress are checked next to workers), and
+  ``PlacementConfig(enabled=True)`` lands each job on one of 2–3
+  instance classes (1769/3008/10240 MB tiers with distinct $/GB-s and
+  cold starts, each with its OWN warm pool) chosen by
+  ``cheapest_fit``/``latency_min``/``cost_latency``.  Both are
+  default-off; the scalar single-pool path is byte-identical to
+  pre-vector traces.
 * **Event-driven interleaving** — every running job keeps its own sim
   clock (its ``Scheduler``'s); the cluster always steps the job whose
   clock trails furthest (``Scheduler.step()``, one round), so pool
@@ -63,11 +74,15 @@ import numpy as np
 
 from repro.runtime.autoscale import ClusterAutoscaleConfig, ClusterAutoscaler
 from repro.runtime.billing import BillingMeter
+from repro.runtime.placement import (DRFSorter, PlacementConfig,
+                                     ResourceVector, choose_class,
+                                     spec_resource_vector,
+                                     spec_worker_demand)
 from repro.runtime.pool import LambdaPool
-from repro.runtime.provider import Provider, ProviderConfig
+from repro.runtime.provider import ClassedProvider, Provider, ProviderConfig
 from repro.runtime.scheduler import Scheduler
 
-POLICIES = ("fifo", "fair_share", "priority", "deadline")
+POLICIES = ("fifo", "fair_share", "priority", "deadline", "drf")
 ENGINES = ("heap", "scan")
 RESERVATIONS = ("phase", "peak")
 
@@ -78,6 +93,8 @@ HELD = "held"          # DAG stage waiting on predecessors (not yet arrived)
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     policy: str = "fifo"          # fifo | fair_share | priority | deadline
+    #                               | drf (Dominant Resource Fairness over
+    #                               the (workers, mem, egress) vector)
     max_concurrent_jobs: int = 4  # job slots
     max_active_workers: int = 64  # aggregate worker capacity (the account
     #                               concurrency limit; autoscale ceiling)
@@ -94,6 +111,19 @@ class ClusterConfig:
     #                               demand from first dispatch to DAG
     #                               completion (gang-style).  Identical
     #                               for plain single-stage jobs.
+    # -- multi-resource capacity (vector mode) ------------------------------
+    # Vector admission tracks (workers, mem_gb, egress_mbps) per job
+    # (runtime/placement.spec_resource_vector) against the capacities
+    # below.  It is ON when policy="drf" (DRF needs the accounting) or
+    # when vector_capacity=True under any policy; otherwise everything
+    # below is inert and the cluster is byte-identical to the scalar
+    # worker-count model.
+    vector_capacity: bool = False
+    mem_capacity_gb: Optional[float] = None    # None: 3 GB x worker cap
+    #                               (the paper's homogeneous 3008 MB pool)
+    egress_capacity_mbps: Optional[float] = None   # None: unmetered
+    # -- heterogeneous instance classes (default-off) -----------------------
+    placement: PlacementConfig = PlacementConfig()
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -107,16 +137,9 @@ class ClusterConfig:
                              f"got {self.reservation!r}")
 
 
-def spec_worker_demand(spec) -> int:
-    """The capacity admission must RESERVE for a spec: the starting
-    fleet, or the per-job autoscaler's ceiling when the spec enables one
-    (a mid-run rescale() never consults the cluster, so the worst case
-    is budgeted up front)."""
-    auto = spec.scheduler.autoscale
-    if auto.policy != "off":
-        return max(spec.scheduler.n_workers, auto.max_workers)
-    return spec.scheduler.n_workers
-
+# spec_worker_demand lives in runtime/placement.py now (the scalar
+# component of the full spec_resource_vector) and is re-exported here
+# for its long-standing callers.
 
 # ---------------------------------------------------------------------------
 # Phase-structured jobs: a DAG of stages, each with its own parallelism
@@ -352,6 +375,9 @@ class Job:
     stage: Optional[str] = None
     stage_after: Tuple[str, ...] = ()
     deps_remaining: int = 0
+    # placement-assigned instance class (None on the homogeneous path)
+    instance_class: Optional[str] = None
+    _rvec: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def n_workers(self) -> int:
@@ -364,6 +390,14 @@ class Job:
         job's mid-run rescale() never consults the cluster, so the
         cluster budgets its worst case up front."""
         return spec_worker_demand(self.spec)
+
+    @property
+    def resources(self) -> ResourceVector:
+        """The job's demand vector (workers, mem_gb, egress_mbps) —
+        derived once from the spec and cached."""
+        if self._rvec is None:
+            self._rvec = spec_resource_vector(self.spec)
+        return self._rvec
 
     @property
     def latency_s(self) -> float:
@@ -408,6 +442,8 @@ class Job:
             "cost_usd": (self.result.cost_usd if self.result else None),
             "converged": (self.result.converged if self.result else None),
         })
+        if self.instance_class is not None:
+            out["instance_class"] = self.instance_class
         if self.dag is not None:
             out["dag"] = self.dag.label
             out["stage"] = self.stage
@@ -439,6 +475,26 @@ class ClusterReport:
     dag_p50_latency_s: float = 0.0
     dag_p95_latency_s: float = 0.0
     dag_cost_usd: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # vector (DRF) fairness — inert defaults outside vector mode.
+    # tenant_dominant_share is each tenant's TIME-AVERAGED dominant
+    # share over that tenant's own active window (informational);
+    # vector_fairness_ratio is the time-average of the INSTANTANEOUS
+    # max/min dominant-share imbalance across allocated tenants over
+    # the cluster's span (1.0 = even service at every instant) — the
+    # quantity DRF's serve-the-lowest rule bounds at each dispatch.
+    tenant_dominant_share: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    vector_fairness_ratio: float = 1.0
+    # heterogeneous placement rollups — empty on the homogeneous path
+    class_jobs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    class_cost_usd: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    class_warm_hit_rate: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    class_keepalive_usd: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    final_class_caps: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def deadline_attainment(self) -> Optional[float]:
@@ -466,9 +522,19 @@ class Cluster:
 
     def __init__(self, cfg: ClusterConfig = ClusterConfig()):
         self.cfg = cfg
+        # heterogeneous placement: one warm pool PER instance class
+        # (ClassedProvider) replaces the single shared provider
+        self.classed: Optional[ClassedProvider] = None
+        if cfg.placement.enabled:
+            self.classed = ClassedProvider(
+                cfg.placement.classes,
+                base_cfg=(cfg.provider if cfg.provider.enabled
+                          else dataclasses.replace(cfg.provider,
+                                                   enabled=True)))
         self.provider: Optional[Provider] = (
             Provider(cfg.provider, cold_base_s=cfg.cold_base_s)
-            if (cfg.share_provider and cfg.provider.enabled) else None)
+            if (cfg.share_provider and cfg.provider.enabled
+                and self.classed is None) else None)
         self.jobs: List[Job] = []
         self.worker_cap = (min(cfg.autoscale.min_workers,
                                cfg.max_active_workers)
@@ -479,6 +545,36 @@ class Cluster:
         self.ledgers: Dict[str, BillingMeter] = {}
         self._dags: List[DagRun] = []
         self._ran = False
+        # -- vector (multi-resource) mode: DRF accounting + capacity ---------
+        self._vector_mode = cfg.policy == "drf" or cfg.vector_capacity
+        mem_cap = (cfg.mem_capacity_gb if cfg.mem_capacity_gb is not None
+                   else 3.0 * cfg.max_active_workers)
+        egress_cap = (cfg.egress_capacity_mbps
+                      if cfg.egress_capacity_mbps is not None
+                      else float("inf"))
+        self.total_vec = np.array([float(cfg.max_active_workers),
+                                   float(mem_cap), float(egress_cap)])
+        # the sorter does double duty: DRF *ordering* when policy="drf",
+        # and allocated-vector *accounting* (capacity checks + the
+        # fairness integrals) whenever vector mode is on
+        self.drf: Optional[DRFSorter] = (
+            DRFSorter(ResourceVector(*self.total_vec))
+            if self._vector_mode else None)
+        self._reserved_vec = np.zeros(3)
+        # dominant-share time integrals: share x seconds per tenant,
+        # advanced at every allocation change (dispatch/finish)
+        self._share_int: Dict[str, float] = {}
+        self._imb_int = 0.0
+        self._share_clock = 0.0
+        self._share_start: Optional[float] = None
+        # -- per-class usage / ledgers (placement mode) ----------------------
+        self._class_used: Dict[str, int] = {}
+        self._class_jobs: Dict[str, int] = {}
+        self.class_ledgers: Dict[str, BillingMeter] = {}
+        if self.classed is not None:
+            for name in self.classed.classes:
+                self._class_used[name] = 0
+                self._class_jobs[name] = 0
 
     # -- admission ----------------------------------------------------------
 
@@ -511,6 +607,23 @@ class Cluster:
             job.reject_reason = (f"needs {job.worker_demand} workers "
                                  f"(fleet or per-job autoscale ceiling) "
                                  f"but the cluster caps at {cap_ceiling}")
+        elif self._vector_mode and (
+                job.resources.mem_gb > self.total_vec[1] + 1e-9
+                or job.resources.egress_mbps > self.total_vec[2] + 1e-9):
+            job.state = REJECTED
+            job.reject_reason = (
+                f"vector demand {job.resources.to_dict()} exceeds the "
+                f"cluster capacity (workers={self.total_vec[0]:g}, "
+                f"mem_gb={self.total_vec[1]:g}, "
+                f"egress_mbps={self.total_vec[2]:g})")
+        elif (self.classed is not None
+              and (job.resources.mem_gb / max(job.worker_demand, 1)
+                   > self.cfg.placement.max_mem_gb() + 1e-9)):
+            job.state = REJECTED
+            job.reject_reason = (
+                f"needs {job.resources.mem_gb / max(job.worker_demand, 1):.2f}"
+                f" GB per sandbox but the largest instance class offers "
+                f"{self.cfg.placement.max_mem_gb():.2f} GB")
         elif (self.cfg.max_queued is not None
               and sum(j.state == QUEUED for j in self.jobs)
               >= self.cfg.max_queued):
@@ -553,6 +666,21 @@ class Cluster:
                           f"{spec_worker_demand(s.spec)} workers (fleet "
                           f"or per-job autoscale ceiling) but the "
                           f"cluster caps at {cap_ceiling}")
+                break
+            rv = (spec_resource_vector(s.spec)
+                  if (self._vector_mode or self.classed is not None)
+                  else None)
+            if self._vector_mode and (
+                    rv.mem_gb > self.total_vec[1] + 1e-9
+                    or rv.egress_mbps > self.total_vec[2] + 1e-9):
+                reason = (f"stage {s.name!r} vector demand "
+                          f"{rv.to_dict()} exceeds the cluster capacity")
+                break
+            if (self.classed is not None
+                    and (rv.mem_gb / max(spec_worker_demand(s.spec), 1)
+                         > self.cfg.placement.max_mem_gb() + 1e-9)):
+                reason = (f"stage {s.name!r} needs more GB per sandbox "
+                          f"than the largest instance class offers")
                 break
         if (reason is None and self.cfg.reservation == "peak"
                 and run.peak_demand > cap_ceiling):
@@ -603,6 +731,11 @@ class Cluster:
                                             if j.deadline_s is not None
                                             else float("inf")),
                              j.submit_at, j.job_id)
+        elif p == "drf":
+            # least dominant share first (live sorter state — callers
+            # that dispatch mid-iteration must re-sort; see _admit)
+            key = lambda j: (self.drf.dominant_share(j.tenant),
+                             j.submit_at, j.job_id)
         else:                                           # fair_share
             svc = self._tenant_service()
             key = lambda j: (svc.get(j.tenant, 0.0), j.submit_at, j.job_id)
@@ -650,9 +783,88 @@ class Cluster:
         return (job.dag.active_demand + job.worker_demand
                 <= job.dag.peak_demand)
 
-    def _dispatch(self, job: Job, at: float):
+    # -- vector accounting / placement (inert outside the new modes) ---------
+
+    def _integrate_shares(self, t: float):
+        """Advance the dominant-share time integrals to ``t``: each
+        tenant accrues (instantaneous dominant share) x dt since the
+        last allocation change, and the cluster accrues (instantaneous
+        max/min dominant share over allocated tenants) x dt — the
+        imbalance integral behind ``vector_fairness_ratio``.  The event
+        clock is clamped monotone — a completion admitting at
+        ``finished_at`` behind the frontier integrates zero span, in
+        BOTH engines."""
+        t = max(t, self._share_clock)
+        dt = t - self._share_clock
+        # nothing accrues before the first dispatch starts the span
+        if dt > 0.0 and self.drf is not None and self._share_start is not None:
+            pos = []
+            for tenant in self.drf.allocations:
+                share = self.drf.dominant_share(tenant)
+                if share > 0.0:
+                    pos.append(share)
+                    self._share_int[tenant] = (
+                        self._share_int.get(tenant, 0.0) + share * dt)
+            # one allocated tenant (or none) is trivially balanced
+            imb = max(pos) / min(pos) if len(pos) >= 2 else 1.0
+            self._imb_int += imb * dt
+        self._share_clock = t
+
+    def _choose_class(self, job: Job):
+        """Placement decision for one dispatch: the per-class headroom
+        is the static class cap clamped by the (possibly autoscaled)
+        aggregate cap, minus the workers the class already hosts."""
+        p = self.cfg.placement
+        per_worker = job.resources.mem_gb / max(job.worker_demand, 1)
+        cap_now = min(self.worker_cap, self.cfg.max_active_workers)
+        caps = p.class_caps or {}
+        headroom = {n: (min(caps.get(n, self.cfg.max_active_workers),
+                            cap_now) - self._class_used[n])
+                    for n in self.classed.classes}
+        warm_idle = {n: len(prov.idle)
+                     for n, prov in self.classed.providers.items()}
+        return choose_class(p, mem_gb_per_worker=per_worker,
+                            workers=job.worker_demand,
+                            warm_idle=warm_idle, headroom=headroom)
+
+    def _place_check(self, job: Job, reserved_ws: int, n_running: int):
+        """The admission gate BOTH engines run, in this order: DAG
+        budget, scalar worker capacity (with the empty-cluster
+        demand_grow branch), vector (mem/egress) capacity, instance-
+        class choice.  Returns (ok, worker delta, chosen class)."""
+        if not self._dag_can_place(job):
+            return False, 0, None       # its own DAG's budget is busy
+        delta = self._admission_delta(job)
+        if delta and reserved_ws + delta > min(
+                self.worker_cap, self.cfg.max_active_workers):
+            # capacity follows demand: an autoscaled cluster sitting
+            # EMPTY below a placeable job's demand grows to meet it
+            # (the queue-depth policy only shapes the cap under load;
+            # it must never starve the head of the queue)
+            if (n_running == 0 and self.autoscaler is not None
+                    and delta <= self.cfg.max_active_workers):
+                old_cap = self.worker_cap
+                self.worker_cap = max(old_cap, delta)
+                self.autoscaler.decisions.append(
+                    (-1, old_cap, self.worker_cap, "demand_grow"))
+            else:
+                return False, delta, None
+        if self._vector_mode:
+            vec = job.resources.as_array()
+            free = self.total_vec - self._reserved_vec
+            if (vec[1] > free[1] + 1e-9) or (vec[2] > free[2] + 1e-9):
+                return False, delta, None
+        klass = None
+        if self.classed is not None:
+            klass = self._choose_class(job)
+            if klass is None:
+                return False, delta, None
+        return True, delta, klass
+
+    def _dispatch(self, job: Job, at: float, klass=None):
         """Build the job's scheduler on a pool backed by the shared
-        provider and start its clock at the admission instant."""
+        provider (or the chosen class's warm pool) and start its clock
+        at the admission instant."""
         from repro import problems                      # lazy: no cycle
         if job.problem is None:
             job.problem = problems.make(job.spec.problem,
@@ -663,10 +875,31 @@ class Cluster:
                       for name in job.stage_after}
             if inputs and hasattr(job.problem, "consume_stage_results"):
                 job.problem.consume_stage_results(inputs)
-        pool = LambdaPool(job.spec.scheduler.pool,
-                          provider=self.provider, tenant=job.tenant)
-        job.scheduler = Scheduler(job.problem, job.spec.scheduler,
+        scfg = job.spec.scheduler
+        provider = self.provider
+        if klass is not None:
+            # the class re-derives the job's sandbox constants: cold
+            # provisioning and the billed memory/rate follow the tier
+            scfg = dataclasses.replace(
+                scfg,
+                pool=dataclasses.replace(scfg.pool,
+                                         cold_base_s=klass.cold_base_s),
+                billing=dataclasses.replace(
+                    scfg.billing, mem_gb=klass.mem_gb,
+                    gb_second_usd=klass.gb_second_usd))
+            provider = self.classed.provider_for(klass.name)
+            job.instance_class = klass.name
+            self._class_used[klass.name] += job.worker_demand
+        pool = LambdaPool(scfg.pool, provider=provider, tenant=job.tenant)
+        job.scheduler = Scheduler(job.problem, scfg,
                                   pool=pool, start_time=at)
+        if self._vector_mode:
+            self._integrate_shares(at)
+            if self._share_start is None:
+                self._share_start = at
+            vec = job.resources.as_array()
+            self.drf.allocate(job.tenant, vec)
+            self._reserved_vec += vec
         job.started_at = at
         job.max_rounds = (job.spec.max_rounds
                           or job.spec.scheduler.admm.max_iters)
@@ -676,28 +909,40 @@ class Cluster:
         """Fill free capacity from the queue, in policy order."""
         eligible = [j for j in self.jobs
                     if j.state == QUEUED and j.submit_at <= now]
+        if self.cfg.policy == "drf":
+            # dominant shares CHANGE at every dispatch, so DRF re-picks
+            # the minimum under the LIVE shares after each placement
+            # (the heap engine's head comparison does the same); a job
+            # skipped for capacity stays skipped for this call
+            blocked: set = set()
+            while True:
+                running = sum(j.state == RUNNING for j in self.jobs)
+                if running >= self.cfg.max_concurrent_jobs:
+                    return
+                cands = [j for j in eligible
+                         if j.state == QUEUED and j.job_id not in blocked]
+                if not cands:
+                    return
+                job = min(cands,
+                          key=lambda j: (self.drf.dominant_share(j.tenant),
+                                         j.submit_at, j.job_id))
+                ok, _, klass = self._place_check(
+                    job, self._reserved_workers(), running)
+                if ok:
+                    self._dispatch(job, max(now, job.submit_at),
+                                   klass=klass)
+                else:
+                    blocked.add(job.job_id)
+            return
         for job in self._dispatch_order(eligible):
             running = sum(j.state == RUNNING for j in self.jobs)
             if running >= self.cfg.max_concurrent_jobs:
                 return
-            if not self._dag_can_place(job):
-                continue                # its own DAG's budget is busy
-            delta = self._admission_delta(job)
-            if delta and self._reserved_workers() + delta > min(
-                    self.worker_cap, self.cfg.max_active_workers):
-                # capacity follows demand: an autoscaled cluster sitting
-                # EMPTY below a placeable job's demand grows to meet it
-                # (the queue-depth policy only shapes the cap under
-                # load; it must never starve the head of the queue)
-                if (running == 0 and self.autoscaler is not None
-                        and delta <= self.cfg.max_active_workers):
-                    old_cap = self.worker_cap
-                    self.worker_cap = max(old_cap, delta)
-                    self.autoscaler.decisions.append(
-                        (-1, old_cap, self.worker_cap, "demand_grow"))
-                else:
-                    continue            # try a smaller job further down
-            self._dispatch(job, max(now, job.submit_at))
+            ok, _, klass = self._place_check(
+                job, self._reserved_workers(), running)
+            if not ok:
+                continue                # try a smaller job further down
+            self._dispatch(job, max(now, job.submit_at), klass=klass)
 
     def _finish(self, job: Job) -> Tuple[List[Job], int]:
         """Retire the fleet (sandboxes → shared warm pool), build the
@@ -718,9 +963,61 @@ class Cluster:
             ledger = self.ledgers[job.tenant] = BillingMeter(
                 sched.meter.cfg)
         ledger.absorb(sched.meter)
+        if self._vector_mode:
+            # recover-on-completion: integrate the span the allocation
+            # covered, then return the vector to the pool (Mesos
+            # unallocated semantics, clamped at zero)
+            self._integrate_shares(job.finished_at)
+            vec = job.resources.as_array()
+            self.drf.unallocated(job.tenant, vec)
+            self._reserved_vec = np.maximum(self._reserved_vec - vec, 0.0)
+        if job.instance_class is not None:
+            self._class_used[job.instance_class] -= job.worker_demand
+            self._class_jobs[job.instance_class] += 1
+            cl = self.class_ledgers.get(job.instance_class)
+            if cl is None:
+                cl = self.class_ledgers[job.instance_class] = BillingMeter(
+                    sched.meter.cfg)
+            cl.absorb(sched.meter)
         if job.dag is not None:
             return job.dag.stage_finished(job, self.cfg.reservation)
         return [], job.worker_demand
+
+    def _autoscale_depth(self, queued_jobs) -> int:
+        """The demand signal the cluster autoscaler sees.  Scalar mode:
+        every arrived queued job.  Vector mode with
+        ``autoscale.blocked_only`` (default): only jobs whose mem/egress
+        demand FITS the free vector capacity — jobs a bigger worker cap
+        could actually admit.  A memory-saturated, worker-idle cluster
+        therefore reports zero demand instead of triggering a spurious
+        grow (tests/test_drf.py pins this)."""
+        jobs = list(queued_jobs)
+        if not (self._vector_mode and self.cfg.autoscale.blocked_only):
+            return len(jobs)
+        free = self.total_vec - self._reserved_vec
+        n = 0
+        for j in jobs:
+            vec = j.resources.as_array()
+            if vec[1] <= free[1] + 1e-9 and vec[2] <= free[2] + 1e-9:
+                n += 1
+        return n
+
+    def _heap_autoscale_depth(self) -> int:
+        """Heap-engine demand signal: the O(1) arrived counter on the
+        scalar path; the filtered count over the policy queues in
+        vector mode (same job set, so scan == heap)."""
+        if not (self._vector_mode and self.cfg.autoscale.blocked_only):
+            return self._n_arrived
+
+        def _queued():
+            if self.cfg.policy in ("fair_share", "drf"):
+                for h in self._tenant_q.values():
+                    for _, _, j in h:
+                        yield j
+            else:
+                for _, _, j in self._queued_q:
+                    yield j
+        return self._autoscale_depth(_queued())
 
     def _observe_autoscale(self, queue_depth: int,
                            active_workers: Optional[int] = None):
@@ -790,9 +1087,9 @@ class Cluster:
                 self._admit(job.finished_at)
             # demand = jobs that have actually ARRIVED and are waiting
             # (future submit_at entries are not backlog yet)
-            self._observe_autoscale(
-                sum(j.state == QUEUED and j.submit_at <= clock
-                    for j in self.jobs))
+            self._observe_autoscale(self._autoscale_depth(
+                j for j in self.jobs
+                if j.state == QUEUED and j.submit_at <= clock))
         return ClusterResult(jobs=list(self.jobs), report=self._report(),
                              dags=list(self._dags))
 
@@ -840,7 +1137,10 @@ class Cluster:
         arr = self._arrivals
         while arr and arr[0][0] <= now:
             _, jid, job = heapq.heappop(arr)
-            if self.cfg.policy == "fair_share":
+            if self.cfg.policy in ("fair_share", "drf"):
+                # tenant-ranked policies: per-tenant submit-ordered
+                # heaps whose heads are compared under the LIVE rank
+                # (service counters / dominant shares)
                 heapq.heappush(
                     self._tenant_q.setdefault(job.tenant, []),
                     (job.submit_at, jid, job))
@@ -854,21 +1154,11 @@ class Cluster:
         empty-cluster demand_grow branch) + dispatch + counter updates.
         Returns False when the job must stay queued (the scan loop's
         ``continue``: try a smaller job further down)."""
-        if not self._dag_can_place(job):
-            return False                # its own DAG's budget is busy
-        delta = self._admission_delta(job)
-        if delta and (self._reserved_ws + delta
-                      > min(self.worker_cap,
-                            self.cfg.max_active_workers)):
-            if (self._n_running == 0 and self.autoscaler is not None
-                    and delta <= self.cfg.max_active_workers):
-                old_cap = self.worker_cap
-                self.worker_cap = max(old_cap, delta)
-                self.autoscaler.decisions.append(
-                    (-1, old_cap, self.worker_cap, "demand_grow"))
-            else:
-                return False
-        self._dispatch(job, max(now, job.submit_at))
+        ok, delta, klass = self._place_check(job, self._reserved_ws,
+                                             self._n_running)
+        if not ok:
+            return False
+        self._dispatch(job, max(now, job.submit_at), klass=klass)
         self._n_arrived -= 1
         self._n_running += 1
         self._reserved_ws += delta
@@ -888,7 +1178,7 @@ class Cluster:
         self._drain_arrivals(now)
         if self._n_arrived == 0:
             return
-        if self.cfg.policy == "fair_share":
+        if self.cfg.policy in ("fair_share", "drf"):
             self._admit_fair(now)
             return
         q, stash = self._queued_q, []
@@ -909,13 +1199,25 @@ class Cluster:
             for entry in stash:
                 heapq.heappush(q, entry)
 
+    def _tenant_rank(self, tenant: str) -> float:
+        """The live tenant-priority term of the dispatch key:
+        accumulated worker-seconds for fair_share, the DRF dominant
+        share for drf.  Lower serves first in both."""
+        if self.cfg.policy == "drf":
+            return self.drf.dominant_share(tenant)
+        return self._tenant_svc.get(tenant, 0.0)
+
     def _admit_fair(self, now: float):
-        """fair_share admission over per-tenant (submit_at, job_id)
-        heaps: the next candidate is the min head under (accumulated
-        tenant service, submit_at, job_id) — exactly the scan sort key,
-        since jobs of one tenant share the service term.  A head with
-        ``submit_at > now`` closes its whole tenant for this call (heads
-        are submit-ordered, so everything behind it is later too)."""
+        """Tenant-ranked admission (fair_share AND drf) over per-tenant
+        (submit_at, job_id) heaps: the next candidate is the min head
+        under (tenant rank, submit_at, job_id) — exactly the scan sort
+        key, since jobs of one tenant share the rank term.  The rank is
+        re-read every iteration, which matters for drf: a dispatch
+        RAISES the dispatching tenant's dominant share, so the next head
+        comparison sees the updated shares (the scan engine re-sorts for
+        the same reason).  A head with ``submit_at > now`` closes its
+        whole tenant for this call (heads are submit-ordered, so
+        everything behind it is later too)."""
         stash, closed = [], set()
         try:
             while self._n_running < self.cfg.max_concurrent_jobs:
@@ -926,7 +1228,7 @@ class Cluster:
                     if h[0][0] > now:
                         closed.add(t)
                         continue
-                    key = (self._tenant_svc.get(t, 0.0), h[0][0], h[0][1])
+                    key = (self._tenant_rank(t), h[0][0], h[0][1])
                     if best_key is None or key < best_key:
                         best_key, best_t = key, t
                 if best_t is None:
@@ -1001,13 +1303,13 @@ class Cluster:
                 # observation the scan engine makes)
                 while next_tick <= clock:
                     self._drain_arrivals(next_tick)
-                    self._observe_autoscale(self._n_arrived,
+                    self._observe_autoscale(self._heap_autoscale_depth(),
                                             active_workers=self._live_ws)
                     next_tick += tick_s
             else:
                 # demand = jobs that have actually ARRIVED and wait
                 self._drain_arrivals(clock)
-                self._observe_autoscale(self._n_arrived,
+                self._observe_autoscale(self._heap_autoscale_depth(),
                                         active_workers=self._live_ws)
         return ClusterResult(jobs=list(self.jobs), report=self._report(),
                              dags=list(self._dags))
@@ -1015,6 +1317,8 @@ class Cluster:
     # -- reporting ------------------------------------------------------------
 
     def _warm_hit_rate(self) -> float:
+        if self.classed is not None:
+            return self.classed.warm_hit_rate()
         if self.provider is not None:
             return self.provider.warm_hit_rate()
         provs = {id(j.scheduler.pool.provider): j.scheduler.pool.provider
@@ -1040,6 +1344,53 @@ class Cluster:
         dags_done = [d for d in self._dags if d.state == DONE]
         dag_lats = (np.array([d.latency_s for d in dags_done])
                     if dags_done else np.zeros(1))
+        # vector fairness.  ``tenant_dominant_share``: each tenant's
+        # dominant-share integral averaged over the tenant's own ACTIVE
+        # window (first submit -> last finish) — a per-tenant progress
+        # rate.  ``vector_fairness_ratio``: the time-average of the
+        # INSTANTANEOUS max/min dominant share across allocated tenants
+        # — the quantity DRF's serve-the-lowest-share rule bounds at
+        # every dispatch instant.  (End-of-run consumption totals are
+        # policy-independent in a drain-everything run — every job runs
+        # its rounds under any order — so the instantaneous imbalance,
+        # not the totals, is where a fairness policy shows.)
+        t_share: Dict[str, float] = {}
+        vec_ratio = 1.0
+        if self._vector_mode and self._share_start is not None:
+            for t, v in sorted(self._share_int.items()):
+                tj = [j for j in self.jobs
+                      if j.tenant == t and j.state == DONE]
+                if not tj:
+                    continue
+                lo = min(j.submit_at for j in tj)
+                hi = max(j.finished_at for j in tj)
+                if hi > lo:
+                    t_share[t] = float(v / (hi - lo))
+            span = self._share_clock - self._share_start
+            if span > 0:
+                vec_ratio = self._imb_int / span
+        # per-class rollups (placement mode)
+        cls_jobs: Dict[str, int] = {}
+        cls_cost: Dict[str, float] = {}
+        cls_warm: Dict[str, float] = {}
+        cls_keep: Dict[str, float] = {}
+        cls_caps: Dict[str, int] = {}
+        if self.classed is not None:
+            caps = self.cfg.placement.class_caps or {}
+            cap_now = min(self.worker_cap, self.cfg.max_active_workers)
+            cls_jobs = dict(self._class_jobs)
+            cls_cost = {n: (float(self.class_ledgers[n].total_usd())
+                            if n in self.class_ledgers else 0.0)
+                        for n in self.classed.classes}
+            cls_warm = {n: float(v) for n, v in
+                        self.classed.warm_hit_rate_by_class().items()}
+            end = max((j.finished_at for j in done
+                       if j.finished_at is not None), default=0.0)
+            cls_keep = {n: float(v) for n, v in
+                        self.classed.keepalive_cost_usd(at=end).items()}
+            cls_caps = {n: min(caps.get(n, self.cfg.max_active_workers),
+                               cap_now)
+                        for n in self.classed.classes}
         return ClusterReport(
             policy=self.cfg.policy,
             n_jobs=len(self.jobs),
@@ -1065,6 +1416,13 @@ class Cluster:
             dag_p95_latency_s=float(np.percentile(dag_lats, 95)),
             dag_cost_usd={d.uid: float(d.total_cost_usd)
                           for d in dags_done},
+            tenant_dominant_share=t_share,
+            vector_fairness_ratio=float(vec_ratio),
+            class_jobs=cls_jobs,
+            class_cost_usd=cls_cost,
+            class_warm_hit_rate=cls_warm,
+            class_keepalive_usd=cls_keep,
+            final_class_caps=cls_caps,
         )
 
 

@@ -71,21 +71,25 @@ MODELS = ("azure", "poisson", "onoff")
 # instance per template to every job using it).  ``est_round_s`` is the
 # calibrated per-round wall estimate the duration->max_rounds mapping
 # divides by; ``engine="batched"`` keeps the per-round simulator cost at
-# one vmapped device call regardless of fleet size.
+# one vmapped device call regardless of fleet size.  ``mem_gb`` is the
+# per-sandbox memory hint the vector/placement layers read (it becomes
+# the spec's billed GB, hence its mem demand and its instance-class
+# fit); 3.0 is the pre-vector billing default, so these hints leave
+# every scalar trace byte-identical.
 DEFAULT_TEMPLATES: Dict[str, dict] = {
     "lasso_s": dict(problem="lasso",
                     problem_kwargs=dict(n_samples=512, n_features=32),
-                    est_round_s=0.35),
+                    est_round_s=0.35, mem_gb=3.0),
     "lasso_m": dict(problem="lasso",
                     problem_kwargs=dict(n_samples=1024, n_features=48),
-                    est_round_s=0.55),
+                    est_round_s=0.55, mem_gb=3.0),
     "logreg_s": dict(problem="logreg",
                      problem_kwargs=dict(n_samples=512, n_features=32,
                                          density=0.1, lam1=0.3,
                                          fista=dict(min_iters=1,
                                                     max_iters=20,
                                                     eps_grad=1e-3)),
-                     est_round_s=0.45),
+                     est_round_s=0.45, mem_gb=3.0),
 }
 
 
@@ -400,6 +404,7 @@ class TraceWorkload:
         per-job pool seed, and the template's problem."""
         from repro.api import ExperimentSpec           # lazy: no cycle
         from repro.core.admm import AdmmOptions
+        from repro.runtime.billing import BillingConfig
         from repro.runtime.pool import PoolConfig
         from repro.runtime.provider import ProviderConfig
         from repro.runtime.scheduler import SchedulerConfig
@@ -410,6 +415,10 @@ class TraceWorkload:
             scheduler=SchedulerConfig(
                 n_workers=job.n_workers,
                 engine="batched",
+                # the template's per-sandbox memory hint: what billing
+                # meters and what the DRF/placement layers read as the
+                # job's memory shape (3.0 = the scalar-era default)
+                billing=BillingConfig(mem_gb=float(t.get("mem_gb", 3.0))),
                 # templates may override ADMM options (e.g. benchmarks
                 # pin eps tiny so round counts stay structural — every
                 # job runs exactly its max_rounds)

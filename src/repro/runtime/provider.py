@@ -123,6 +123,11 @@ class Provider:
         # is tracked under the lease map too, but gets no ledger entry.
         self.leased: Dict[int, Optional[str]] = {}
         self.tenant_stats: Dict[str, ProviderStats] = {}
+        # idle sandbox-seconds the keep-alive pool has held so far: the
+        # quantity a provider's keep-alive pricing bills (per-class
+        # rollups in the cluster report).  Pure bookkeeping — accrued on
+        # acquire / evict / reap, never consulted by any decision.
+        self.idle_sandbox_s = 0.0
         self._next_cid = 0
         self._gd_clock = 0.0           # greedy-dual inflation clock
         # token bucket for cold provisions
@@ -166,6 +171,10 @@ class Provider:
             if (at - w.released_at > c.keepalive_s
                     or at - w.created_at > c.max_env_age_s):
                 self.stats.expirations += 1
+                # the sandbox sat idle until its TTL (or max age) struck,
+                # not until we noticed at ``at``
+                self.idle_sandbox_s += max(
+                    min(at - w.released_at, c.keepalive_s), 0.0)
             else:
                 alive.append(w)
         self.idle = alive
@@ -217,6 +226,7 @@ class Provider:
                 self._gd_clock = max(self._gd_clock, victim.priority)
             self.idle.remove(victim)
             self.stats.evictions += 1
+            self.idle_sandbox_s += max(at - victim.released_at, 0.0)
         w = WarmContainer(cid=cid, created_at=created_at, released_at=at,
                           last_used=at, uses=uses, speed=speed)
         w.priority = self._priority(w)
@@ -239,6 +249,7 @@ class Provider:
             return None
         w = max(self.idle, key=lambda c: c.released_at)
         self.idle.remove(w)
+        self.idle_sandbox_s += max(at - w.released_at, 0.0)
         self.leased[w.cid] = tenant
         self.stats.warm_hits += 1
         if ts is not None:
@@ -281,3 +292,109 @@ class Provider:
         self._tokens_at = at + wait
         self.stats.throttle_wait_s += wait
         return wait
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous instance classes: memory size <-> $/GB-s <-> start latency
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceClass:
+    """One sandbox flavor the provider sells.
+
+    Real FaaS fleets are not the single 3008 MB size the paper prices:
+    memory tiers come with distinct $/GB-s (the effective rate the
+    "Serverless architecture efficiency" study measures), distinct cold
+    starts (provisioning scales with the sandbox image/memory footprint)
+    and distinct warm reconnects (more memory buys more vCPU, so the
+    handler re-enters faster), plus a keep-alive rate for the idle
+    sandbox-seconds the warm pool holds."""
+    name: str
+    mem_mb: int
+    gb_second_usd: float
+    cold_base_s: float              # provisioning grows with the image
+    warm_base_s: float              # reconnect shrinks with the vCPU share
+    keepalive_usd_per_gb_s: float   # idle warm-pool memory rate
+
+    @property
+    def mem_gb(self) -> float:
+        return self.mem_mb / 1024.0
+
+
+# The 2019-era AWS Lambda tiers the paper's cost section brackets: the
+# 1769 MB point (one full vCPU), the paper's own 3008 MB high-memory
+# lambdas, and the 10240 MB top tier.
+DEFAULT_CLASSES = (
+    InstanceClass("s1769", mem_mb=1769, gb_second_usd=1.58e-5,
+                  cold_base_s=2.0, warm_base_s=0.50,
+                  keepalive_usd_per_gb_s=4.2e-6),
+    InstanceClass("m3008", mem_mb=3008, gb_second_usd=1.66667e-5,
+                  cold_base_s=2.2, warm_base_s=0.45,
+                  keepalive_usd_per_gb_s=4.2e-6),
+    InstanceClass("l10240", mem_mb=10240, gb_second_usd=1.82e-5,
+                  cold_base_s=3.0, warm_base_s=0.40,
+                  keepalive_usd_per_gb_s=4.2e-6),
+)
+
+
+class ClassedProvider:
+    """A per-class family of warm pools: one independent ``Provider``
+    per ``InstanceClass``, each with its own idle list, RNG (seeded
+    ``base seed + class index`` so draw sequences never interleave
+    across classes), stats ledger, and cold/warm latency constants.
+
+    Sandboxes of different memory sizes are NOT interchangeable — a
+    10 GB job cannot land on a 1.7 GB container — so warm capacity,
+    eviction pressure and hit rates are all per class; the aggregate
+    ``warm_hit_rate()`` is the launch-weighted mean the cluster report
+    quotes."""
+
+    def __init__(self, classes=DEFAULT_CLASSES,
+                 base_cfg: ProviderConfig = ProviderConfig(enabled=True)):
+        if not classes:
+            raise ValueError("ClassedProvider needs at least one class")
+        self.classes: Dict[str, InstanceClass] = {}
+        self.providers: Dict[str, Provider] = {}
+        for i, k in enumerate(classes):
+            if k.name in self.classes:
+                raise ValueError(f"duplicate instance class {k.name!r}")
+            self.classes[k.name] = k
+            cfg = dataclasses.replace(base_cfg, container_mb=k.mem_mb,
+                                      warm_base_s=k.warm_base_s,
+                                      seed=base_cfg.seed + i)
+            self.providers[k.name] = Provider(cfg,
+                                              cold_base_s=k.cold_base_s)
+
+    def provider_for(self, name: str) -> Provider:
+        return self.providers[name]
+
+    def class_of(self, name: str) -> InstanceClass:
+        return self.classes[name]
+
+    def warm_hit_rate(self) -> float:
+        hits = sum(p.stats.warm_hits for p in self.providers.values())
+        total = hits + sum(p.stats.cold_misses
+                           for p in self.providers.values())
+        return hits / total if total else 0.0
+
+    def warm_hit_rate_by_class(self) -> Dict[str, float]:
+        return {n: p.warm_hit_rate() for n, p in self.providers.items()}
+
+    def keepalive_cost_usd(self, at: Optional[float] = None
+                           ) -> Dict[str, float]:
+        """Idle warm-pool dollars per class: idle sandbox-seconds held
+        so far x the class memory x its keep-alive rate.  ``at`` (the
+        report instant) also bills the OPEN idle interval of sandboxes
+        still sitting warm — without it, a pool whose sandboxes never
+        expired mid-run would report zero keep-alive spend."""
+        out = {}
+        for n, p in self.providers.items():
+            idle_s = p.idle_sandbox_s
+            if at is not None:
+                idle_s += sum(
+                    max(min(at - w.released_at, p.cfg.keepalive_s), 0.0)
+                    for w in p.idle)
+            out[n] = (idle_s * self.classes[n].mem_gb
+                      * self.classes[n].keepalive_usd_per_gb_s)
+        return out

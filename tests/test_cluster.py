@@ -233,8 +233,8 @@ def test_worker_capacity_bounds_concurrency(lasso):
     peak = []
     orig = c._dispatch
 
-    def spy(job, at):
-        orig(job, at)
+    def spy(job, at, **kw):
+        orig(job, at, **kw)
         peak.append(c._active_workers())
     c._dispatch = spy
     c.run_all()
@@ -297,8 +297,8 @@ def test_admission_reserves_per_job_autoscale_ceiling(lasso):
     concurrent = []
     orig = c._dispatch
 
-    def spy(job, at):
-        orig(job, at)
+    def spy(job, at, **kw):
+        orig(job, at, **kw)
         concurrent.append(c._reserved_workers())
     c._dispatch = spy
     c.run_all()

@@ -22,8 +22,9 @@ from _hyp import HAS_HYPOTHESIS, given, settings, st
 from repro import api, problems
 from repro.api import ExperimentSpec
 from repro.core.admm import AdmmOptions
-from repro.runtime import (Cluster, ClusterAutoscaleConfig, ClusterConfig,
-                           PoolConfig, ProviderConfig, SchedulerConfig)
+from repro.runtime import (BillingConfig, Cluster, ClusterAutoscaleConfig,
+                           ClusterConfig, PlacementConfig, PoolConfig,
+                           ProviderConfig, SchedulerConfig)
 from repro.runtime.cluster import ENGINES
 from repro.runtime.loadgen import LoadSpec, generate
 
@@ -87,14 +88,15 @@ def _fingerprint(res):
 
 
 @pytest.mark.parametrize("policy",
-                         ["fifo", "priority", "deadline", "fair_share"])
+                         ["fifo", "priority", "deadline", "fair_share",
+                          "drf"])
 def test_heap_matches_scan_all_policies(lasso, policy):
     _, heap_res = _run("heap", lasso, policy=policy)
     _, scan_res = _run("scan", lasso, policy=policy)
     assert _fingerprint(heap_res) == _fingerprint(scan_res)
 
 
-@pytest.mark.parametrize("policy", ["fifo", "fair_share"])
+@pytest.mark.parametrize("policy", ["fifo", "fair_share", "drf"])
 def test_heap_matches_scan_with_autoscaler(lasso, policy):
     """tick_s=0 keeps the legacy per-round observation cadence — the
     autoscaler's per-call counters (cooldown) make cadence observable,
@@ -104,6 +106,101 @@ def test_heap_matches_scan_with_autoscaler(lasso, policy):
     assert _fingerprint(heap_res) == _fingerprint(scan_res)
     assert ch.autoscaler.decisions == cs.autoscaler.decisions
     assert ch.worker_cap == cs.worker_cap
+
+
+# ---------------------------------------------------------------------------
+# heap == scan under vector demand + class-aware placement
+# ---------------------------------------------------------------------------
+
+_MEMS = (1.5, 2.5, 9.0)    # one per instance-class tier (9.0 only l10240)
+
+
+def _vspec(seed, *, w, mem_gb, rounds=2):
+    return ExperimentSpec(
+        problem="lasso", problem_kwargs=KW,
+        scheduler=SchedulerConfig(
+            n_workers=w, replication=2,
+            admm=AdmmOptions(max_iters=rounds),
+            billing=BillingConfig(mem_gb=mem_gb),
+            pool=PoolConfig(seed=seed, provider=ProviderConfig())),
+        max_rounds=rounds, label=f"vjob{seed}")
+
+
+def _submit_place_mix(c: Cluster, problem):
+    """12 jobs / 3 tenants cycling the three class tiers' memory shapes,
+    staggered so each class's warm pool churns between hits and cold
+    provisions (the latency_min signal actually varies)."""
+    tenants = ("alice", "bob", "carol")
+    for i in range(12):
+        mem = _MEMS[i % 3]
+        c.submit(_vspec(seed=300 + i, w=2 if mem > 4 else 4, mem_gb=mem),
+                 tenant=tenants[i % 3], priority=(i * 3) % 5,
+                 deadline_s=50.0 + (i * 11) % 40,
+                 at=float((i * 5) % 25), problem=problem)
+
+
+def _run_place(engine, problem, *, policy="fifo", place="cost_latency",
+               autoscale=False, spy=None):
+    kw = dict(engine=engine, policy=policy, max_concurrent_jobs=3,
+              max_active_workers=10,
+              placement=PlacementConfig(enabled=True, policy=place))
+    if autoscale:
+        kw["autoscale"] = ClusterAutoscaleConfig(
+            policy="queue_depth", min_workers=6, max_workers=10,
+            grow_at_depth=2, cooldown_events=2)
+    c = Cluster(ClusterConfig(**kw))
+    if spy is not None:
+        spy(c)
+    _submit_place_mix(c, problem)
+    return c, c.run_all()
+
+
+@pytest.mark.parametrize("place",
+                         ["cheapest_fit", "latency_min", "cost_latency"])
+def test_heap_matches_scan_placement(lasso, place):
+    """Class choice reads mutable state (each class's warm pool, the
+    per-class usage counters), so placement only stays deterministic if
+    both engines consult it at identical instants — the differential
+    contract extends to the placement layer."""
+    _, heap_res = _run_place("heap", lasso, place=place)
+    _, scan_res = _run_place("scan", lasso, place=place)
+    assert _fingerprint(heap_res) == _fingerprint(scan_res)
+
+
+def test_heap_matches_scan_drf_with_placement(lasso):
+    """The full multi-resource stack at once: DRF ordering + vector
+    admission + class-aware placement, byte-identical across engines,
+    and every done job actually landed on a class."""
+    _, heap_res = _run_place("heap", lasso, policy="drf")
+    _, scan_res = _run_place("scan", lasso, policy="drf")
+    assert _fingerprint(heap_res) == _fingerprint(scan_res)
+    landed = {j.summary().get("instance_class")
+              for j in heap_res.jobs if j.state == "done"}
+    assert landed == {"s1769", "m3008", "l10240"}
+
+
+def test_heap_matches_scan_placement_with_autoscaler(lasso):
+    ch, heap_res = _run_place("heap", lasso, autoscale=True)
+    cs, scan_res = _run_place("scan", lasso, autoscale=True)
+    assert _fingerprint(heap_res) == _fingerprint(scan_res)
+    assert ch.autoscaler.decisions == cs.autoscaler.decisions
+    assert ch.worker_cap == cs.worker_cap
+
+
+def test_drf_pop_sequences_identical(lasso):
+    """Not just the same reports: under policy="drf" both engines step
+    the SAME job at the SAME sim instant, round for round."""
+    hp, sp = [], []
+    _run("heap", lasso, policy="drf", spy=_step_spy(hp))
+    _run("scan", lasso, policy="drf", spy=_step_spy(sp))
+    assert hp == sp
+
+
+def test_placement_pop_sequences_identical(lasso):
+    hp, sp = [], []
+    _run_place("heap", lasso, spy=_step_spy(hp))
+    _run_place("scan", lasso, spy=_step_spy(sp))
+    assert hp == sp
 
 
 def test_heap_is_the_default_engine():
@@ -202,8 +299,8 @@ def _step_spy(record):
     def install(c):
         orig_dispatch = c._dispatch
 
-        def spy(job, at):
-            orig_dispatch(job, at)
+        def spy(job, at, **kw):
+            orig_dispatch(job, at, **kw)
             orig_step = job.scheduler.step
 
             def stepped(_job=job, _orig=orig_step):

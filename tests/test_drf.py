@@ -1,0 +1,501 @@
+"""Multi-resource DRF fairness + class-aware placement (runtime/placement.py).
+
+Four layers of guarantees, each pinned here:
+
+* **DRFSorter invariants** (property-based, Mesos sorter semantics):
+  with admission gated on ``free()``, no client's dominant share ever
+  exceeds 1; allocated + free == total per resource EXACTLY (demands
+  are dyadic rationals, so float addition is exact and the conservation
+  law is bitwise); recover-on-completion restores the sorter to its
+  pre-allocation state; a stray double-release clamps at zero instead
+  of driving a share negative.
+* **Demand model + placement units**: ``spec_resource_vector`` derives
+  (workers, GB, Mbit/s) from the spec — autoscale ceilings budget the
+  worst case, compression genuinely shrinks the egress coordinate — and
+  ``choose_class`` lands each job on the right ``InstanceClass`` tier
+  per policy, deterministically.
+* **DRF beats scalar fair_share on a shaped stream**: the reduced twin
+  of benchmarks/bench_drf.py (one W=1/10GB memory tenant stacking jobs
+  against W=8/1.5GB worker tenants) must yield a strictly lower
+  ``vector_fairness_ratio`` under ``policy="drf"``.
+* **Cluster autoscaler, multi-resource demand signal**: a memory-
+  saturated but worker-idle backlog must NOT trigger a spurious
+  capacity grow (``ClusterAutoscaleConfig.blocked_only``, the fix for
+  the controller's latent single-resource assumption).
+
+Plus the golden pin: the drf run's full schedule (who started/finished
+when, the fairness rollup) is pinned literally in
+tests/golden/drf_trace.json.  To re-pin after an INTENTIONAL model
+change:  PYTHONPATH=src python tests/test_drf.py  (see docs/TESTING.md).
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+from repro import problems
+from repro.api import ExperimentSpec
+from repro.core.admm import AdmmOptions
+from repro.runtime import (BillingConfig, Cluster, ClusterAutoscaleConfig,
+                           ClusterConfig, PoolConfig, ProviderConfig,
+                           SchedulerConfig)
+from repro.runtime.autoscale import AutoscaleConfig
+from repro.runtime.cluster import POLICIES
+from repro.runtime.placement import (DEFAULT_CLASSES, DRFSorter,
+                                     PlacementConfig, ResourceVector,
+                                     choose_class, expected_start_s,
+                                     spec_resource_vector, spec_wire_d,
+                                     spec_worker_demand)
+
+# ---------------------------------------------------------------------------
+# DRFSorter: Mesos sorter invariants (property-based)
+# ---------------------------------------------------------------------------
+
+TOTAL = ResourceVector(16.0, 64.0, 128.0)
+
+# demands are DYADIC rationals (workers integral, mem in 0.25 GB steps,
+# egress in 0.125 Mbit/s steps): every value and every partial sum is
+# exactly representable in binary float, so the conservation and
+# restore properties below can assert bitwise equality, not allclose
+_events = st.lists(
+    st.tuples(st.integers(0, 3),          # client index
+              st.integers(0, 8),          # workers
+              st.integers(0, 40),         # mem, units of 0.25 GB
+              st.integers(0, 64)),        # egress, units of 0.125 Mbit/s
+    min_size=1, max_size=24)
+
+
+def _vec(w, m, e):
+    return np.array([float(w), 0.25 * m, 0.125 * e])
+
+
+@given(_events)
+@settings(max_examples=60, deadline=None)
+def test_shares_bounded_and_conserved(events):
+    """Gate every allocation on free(): then no dominant share exceeds
+    1, and allocated + free == total bitwise at every step."""
+    s = DRFSorter(TOTAL)
+    for ci, w, m, e in events:
+        vec = _vec(w, m, e)
+        if np.all(vec <= s.free()):
+            s.allocate(f"c{ci}", vec)
+        assert np.array_equal(s.allocated_total() + s.free(),
+                              s.total)
+        assert np.all(s.free() >= 0.0)
+        for c in s.allocations:
+            assert s.dominant_share(c) <= 1.0
+
+
+@given(_events)
+@settings(max_examples=60, deadline=None)
+def test_recover_on_completion_restores_sorter(events):
+    """allocate(v) then unallocated(v) is an EXACT no-op on the whole
+    sorter state (allocations, shares, serve order) — the recover-on-
+    completion path can never leak state into the next dispatch."""
+    s = DRFSorter(TOTAL)
+    for ci, w, m, e in events:
+        s.allocate(f"c{ci}", _vec(w, m, e))
+    before = {c: a.copy() for c, a in s.allocations.items()}
+    order = s.sort()
+    for ci, w, m, e in reversed(events):
+        s.allocate(f"c{ci}", _vec(w, m, e))
+        s.unallocated(f"c{ci}", _vec(w, m, e))
+    assert set(s.allocations) == set(before)
+    for c, a in before.items():
+        assert np.array_equal(s.allocations[c], a)
+    assert s.sort() == order
+
+
+@given(st.integers(0, 8), st.integers(0, 40), st.integers(0, 64))
+@settings(max_examples=40, deadline=None)
+def test_double_release_clamps_at_zero(w, m, e):
+    """Mesos semantics: releasing more than was allocated floors the
+    allocation at zero — a stray double-release cannot drive a share
+    negative (which would let that client jump every queue)."""
+    s = DRFSorter(TOTAL)
+    s.allocate("a", _vec(w, m, e))
+    s.unallocated("a", _vec(w, m, e) + 1.0)
+    assert np.array_equal(s.allocations["a"], np.zeros(3))
+    assert s.dominant_share("a") == 0.0
+
+
+def test_sort_serves_lowest_dominant_share_first():
+    s = DRFSorter(TOTAL)
+    s.allocate("heavy", np.array([8.0, 8.0, 0.0]))    # dom 8/16 = 0.5
+    s.allocate("mem", np.array([1.0, 48.0, 0.0]))     # dom 48/64 = 0.75
+    s.allocate("light", np.array([2.0, 2.0, 2.0]))    # dom 2/16 = 0.125
+    assert s.sort() == ["light", "heavy", "mem"]
+    assert s.shares() == {"heavy": 0.5, "mem": 0.75, "light": 0.125}
+
+
+def test_ties_break_on_client_name():
+    s = DRFSorter(TOTAL)
+    for c in ("zed", "ann"):
+        s.allocate(c, np.array([4.0, 0.0, 0.0]))
+    assert s.sort() == ["ann", "zed"]
+
+
+def test_unmetered_resources_carry_no_share():
+    """Infinite (unmetered) and zero totals are masked out of the
+    dominant share — the default egress_capacity_mbps=None must not
+    make every job's share infinite or NaN."""
+    s = DRFSorter(ResourceVector(4.0, float("inf"), 0.0))
+    s.allocate("a", np.array([1.0, 100.0, 50.0]))
+    assert s.dominant_share("a") == 0.25   # workers only
+
+
+# ---------------------------------------------------------------------------
+# demand model: spec -> ResourceVector
+# ---------------------------------------------------------------------------
+
+_KW = dict(n_samples=64, n_features=8)
+
+
+def _spec(*, w=2, mem_gb=3.0, rounds=2, seed=0, problem="lasso",
+          problem_kwargs=None, **sched_kw):
+    return ExperimentSpec(
+        problem=problem,
+        problem_kwargs=_KW if problem_kwargs is None else problem_kwargs,
+        scheduler=SchedulerConfig(
+            n_workers=w,
+            admm=AdmmOptions(max_iters=rounds, eps_primal=1e-12,
+                             eps_dual=1e-12),
+            billing=BillingConfig(mem_gb=mem_gb),
+            pool=PoolConfig(seed=seed, provider=ProviderConfig(enabled=True)),
+            **sched_kw),
+        max_rounds=rounds, label=f"w{w}m{mem_gb:g}s{seed}")
+
+
+def test_worker_demand_budgets_autoscale_ceiling():
+    assert spec_worker_demand(_spec(w=4)) == 4
+    auto = _spec(w=4, autoscale=AutoscaleConfig(
+        policy="target_efficiency", min_workers=2, max_workers=12))
+    assert spec_worker_demand(auto) == 12
+
+
+def test_resource_vector_shape():
+    v = spec_resource_vector(_spec(w=4, mem_gb=2.5))
+    assert v.workers == 4.0
+    assert v.mem_gb == 10.0                  # 4 sandboxes x 2.5 GB each
+    assert v.egress_mbps > 0.0
+    assert v.to_dict() == {"workers": 4.0, "mem_gb": 10.0,
+                           "egress_mbps": v.egress_mbps}
+
+
+def test_wire_d_resolution():
+    assert spec_wire_d(_spec()) == 8                       # n_features
+    assert spec_wire_d(_spec(wire_d=128)) == 128           # explicit wins
+    soft = _spec(problem="softmax",
+                 problem_kwargs=dict(n_samples=64, n_features=4, n_classes=3))
+    assert spec_wire_d(soft) == 12                         # d x classes
+
+
+def test_compression_shrinks_egress_demand():
+    """A topk tenant genuinely demands less of the fan-in resource —
+    the egress coordinate is wire bytes, not a worker count proxy."""
+    dense = spec_resource_vector(_spec(w=4))
+    topk = spec_resource_vector(_spec(w=4, compress="topk", topk_frac=0.1))
+    assert topk.egress_mbps < dense.egress_mbps
+    assert (topk.workers, topk.mem_gb) == (dense.workers, dense.mem_gb)
+
+
+# ---------------------------------------------------------------------------
+# class-aware placement units
+# ---------------------------------------------------------------------------
+
+_NAMES = [k.name for k in DEFAULT_CLASSES]
+_ROOM = {n: 1000 for n in _NAMES}
+_COLD = {n: 0 for n in _NAMES}
+
+
+def test_default_classes_are_distinct_tiers():
+    mems = [k.mem_mb for k in DEFAULT_CLASSES]
+    assert mems == sorted(mems) and len(set(mems)) == len(mems)
+    rates = [k.gb_second_usd for k in DEFAULT_CLASSES]
+    assert rates == sorted(rates)            # bigger tier, pricier GB-s
+    colds = [k.cold_base_s for k in DEFAULT_CLASSES]
+    assert colds == sorted(colds)
+
+
+def test_cheapest_fit_takes_lowest_cost_tier():
+    cfg = PlacementConfig(enabled=True, policy="cheapest_fit")
+    k = choose_class(cfg, mem_gb_per_worker=1.5, workers=4,
+                     warm_idle=_COLD, headroom=_ROOM)
+    assert k.name == "s1769"
+
+
+def test_big_sandbox_skips_to_the_only_fit():
+    for policy in ("cheapest_fit", "latency_min", "cost_latency"):
+        cfg = PlacementConfig(enabled=True, policy=policy)
+        k = choose_class(cfg, mem_gb_per_worker=9.0, workers=2,
+                         warm_idle=_COLD, headroom=_ROOM)
+        assert k.name == "l10240"
+
+
+def test_latency_min_follows_the_warm_pool():
+    cfg = PlacementConfig(enabled=True, policy="latency_min")
+    warm = dict(_COLD)
+    warm["l10240"] = 8           # only the big tier has warm sandboxes
+    k = choose_class(cfg, mem_gb_per_worker=1.5, workers=4,
+                     warm_idle=warm, headroom=_ROOM)
+    assert k.name == "l10240"    # 0.40s warm beats 2.0s+ cold elsewhere
+
+
+def test_headroom_excludes_capped_classes():
+    cfg = PlacementConfig(enabled=True, policy="cheapest_fit")
+    room = dict(_ROOM)
+    room["s1769"] = 3            # cap below the fleet
+    k = choose_class(cfg, mem_gb_per_worker=1.5, workers=4,
+                     warm_idle=_COLD, headroom=room)
+    assert k.name == "m3008"
+    assert choose_class(cfg, mem_gb_per_worker=1.5, workers=4,
+                        warm_idle=_COLD,
+                        headroom={n: 0 for n in _NAMES}) is None
+
+
+def test_expected_start_interpolates_warm_to_cold():
+    k = DEFAULT_CLASSES[0]
+    assert expected_start_s(k, 4, 0) == pytest.approx(k.cold_base_s)
+    assert expected_start_s(k, 4, 4) == pytest.approx(k.warm_base_s)
+    assert expected_start_s(k, 4, 2) == pytest.approx(
+        (2 * k.warm_base_s + 2 * k.cold_base_s) / 4)
+
+
+def test_placement_config_validation():
+    with pytest.raises(ValueError, match="placement policy"):
+        PlacementConfig(policy="roulette")
+    with pytest.raises(ValueError, match="instance class"):
+        PlacementConfig(classes=())
+    with pytest.raises(ValueError, match="latency_weight"):
+        PlacementConfig(latency_weight=1.5)
+
+
+def test_drf_is_a_cluster_policy():
+    assert "drf" in POLICIES
+    assert ClusterConfig(policy="drf").policy == "drf"
+
+
+# ---------------------------------------------------------------------------
+# cluster-level admission: vector + per-sandbox rejections
+# ---------------------------------------------------------------------------
+
+def test_vector_admission_rejects_oversize_demand():
+    c = Cluster(ClusterConfig(vector_capacity=True, mem_capacity_gb=8.0,
+                              max_active_workers=8))
+    job = c.submit(_spec(w=1, mem_gb=10.0))
+    assert job.state == "rejected"
+    assert "vector demand" in job.reject_reason
+
+
+def test_placement_rejects_oversandbox_memory():
+    c = Cluster(ClusterConfig(placement=PlacementConfig(enabled=True),
+                              max_active_workers=8))
+    job = c.submit(_spec(w=1, mem_gb=12.0))
+    assert job.state == "rejected"
+    assert "largest instance class" in job.reject_reason
+
+
+# ---------------------------------------------------------------------------
+# the shaped-tenant stream: drf must beat scalar fair_share
+# ---------------------------------------------------------------------------
+
+_FAIR_KW = {"lasso": dict(n_samples=64, n_features=8),
+            "softmax": dict(n_samples=64, n_features=4, n_classes=3)}
+_MEM_SHAPE = dict(problem="lasso", w=1, mem_gb=10.0)
+_CPU_SHAPE = dict(problem="softmax", w=8, mem_gb=1.5)
+
+
+def _make_problems():
+    return {k: problems.make(k, **v) for k, v in _FAIR_KW.items()}
+
+
+def _fair_run(probs, policy):
+    """The reduced twin of benchmarks/bench_drf.py experiment 1: one
+    memory tenant stacking W=1/10GB jobs against two worker-heavy
+    tenants, identical submission stream under both policies."""
+    c = Cluster(ClusterConfig(
+        policy=policy, vector_capacity=True,
+        max_concurrent_jobs=6, max_active_workers=24,
+        mem_capacity_gb=40.0))
+    backlog = {"mem": [(_MEM_SHAPE, 5)] * 7,
+               "cpu0": [(_CPU_SHAPE, 3)] * 3,
+               "cpu1": [(_CPU_SHAPE, 3)] * 3}
+    i = 0
+    while any(backlog.values()):
+        for tenant in ("mem", "cpu0", "mem", "cpu1"):
+            if backlog.get(tenant):
+                shape, rounds = backlog[tenant].pop(0)
+                c.submit(
+                    _spec(w=shape["w"], mem_gb=shape["mem_gb"],
+                          rounds=rounds, seed=200 + i,
+                          problem=shape["problem"],
+                          problem_kwargs=_FAIR_KW[shape["problem"]]),
+                    tenant=tenant, at=0.1 * i,
+                    problem=probs[shape["problem"]])
+                i += 1
+    return c.run_all()
+
+
+@pytest.fixture(scope="module")
+def fair_runs():
+    probs = _make_problems()
+    return {p: _fair_run(probs, p) for p in ("fair_share", "drf")}
+
+
+def test_drf_bounds_dominant_share_spread(fair_runs):
+    """The headline: time-averaged instantaneous max/min dominant-share
+    imbalance strictly lower under drf than under scalar fair_share on
+    the IDENTICAL stream (benchmarks/bench_drf.py pins the full-size
+    version; this is the fast in-suite twin)."""
+    drf = fair_runs["drf"].report
+    fair = fair_runs["fair_share"].report
+    assert drf.vector_fairness_ratio < fair.vector_fairness_ratio
+    for rep in (drf, fair):
+        assert rep.vector_fairness_ratio >= 1.0
+        assert set(rep.tenant_dominant_share) == {"mem", "cpu0", "cpu1"}
+        assert all(s > 0.0 for s in rep.tenant_dominant_share.values())
+
+
+def test_fair_stream_completes_identically(fair_runs):
+    """Both policies drain the same jobs — only the ORDER differs."""
+    for res in fair_runs.values():
+        assert all(j.state == "done" for j in res.jobs)
+        assert res.report.n_jobs == 13 and res.report.n_rejected == 0
+
+
+# ---------------------------------------------------------------------------
+# placement end-to-end: per-class rollups in the report
+# ---------------------------------------------------------------------------
+
+def test_placement_run_rolls_up_per_class():
+    probs = {"lasso": problems.make("lasso", **_FAIR_KW["lasso"])}
+    c = Cluster(ClusterConfig(
+        policy="fifo", max_concurrent_jobs=2, max_active_workers=8,
+        placement=PlacementConfig(enabled=True, policy="cheapest_fit")))
+    for i, mem in enumerate((1.5, 2.5, 9.0, 1.5)):
+        c.submit(_spec(w=2 if mem < 9 else 1, mem_gb=mem, seed=400 + i),
+                 tenant=f"t{i % 2}", at=0.5 * i, problem=probs["lasso"])
+    res = c.run_all()
+    rep = res.report
+    assert all(j.state == "done" for j in res.jobs)
+    # every job landed on its cheapest fitting tier and is counted there
+    landed = [j.summary()["instance_class"] for j in res.jobs]
+    assert landed == ["s1769", "m3008", "l10240", "s1769"]
+    assert rep.class_jobs == {"s1769": 2, "m3008": 1, "l10240": 1}
+    assert set(rep.class_cost_usd) == set(_NAMES)
+    assert sum(rep.class_cost_usd.values()) == pytest.approx(
+        rep.total_cost_usd, rel=1e-6)
+    assert all(v >= 0.0 for v in rep.class_keepalive_usd.values())
+
+
+# ---------------------------------------------------------------------------
+# cluster autoscaler: the multi-resource demand signal
+# ---------------------------------------------------------------------------
+
+def _blocked_run(engine, blocked_only, probs):
+    """Memory-saturated, worker-idle: one W=1 job holds ALL 8 GB, the
+    rest of the backlog queues on memory while 3 of 4 workers idle."""
+    c = Cluster(ClusterConfig(
+        engine=engine, policy="fifo", vector_capacity=True,
+        mem_capacity_gb=8.0, max_active_workers=32, max_concurrent_jobs=8,
+        autoscale=ClusterAutoscaleConfig(
+            policy="queue_depth", min_workers=4, max_workers=32,
+            grow_at_depth=2, cooldown_events=1,
+            blocked_only=blocked_only)))
+    for i in range(4):
+        c.submit(_spec(w=1, mem_gb=8.0, rounds=1, seed=500 + i),
+                 tenant="t", at=0.0, problem=probs["lasso"])
+    res = c.run_all()
+    return c, res
+
+
+@pytest.mark.parametrize("engine", ["heap", "scan"])
+def test_memory_saturated_cluster_does_not_spuriously_grow(engine):
+    """The latent single-resource assumption, pinned fixed: with
+    ``blocked_only`` (default) a backlog blocked on MEMORY reports zero
+    worker demand and capacity holds; with the legacy raw count the
+    controller doubles capacity that cannot admit anything."""
+    probs = {"lasso": problems.make("lasso", **_FAIR_KW["lasso"])}
+    c_fix, res_fix = _blocked_run(engine, True, probs)
+    assert all(j.state == "done" for j in res_fix.jobs)
+    grows = [d for d in c_fix.autoscaler.decisions if d[2] > d[1]]
+    assert grows == []
+    assert c_fix.worker_cap == 4
+    c_bug, res_bug = _blocked_run(engine, False, probs)
+    assert all(j.state == "done" for j in res_bug.jobs)
+    assert any(d[2] > d[1] for d in c_bug.autoscaler.decisions)
+
+
+def test_blocked_only_is_the_default_and_inert_without_vectors():
+    assert ClusterAutoscaleConfig().blocked_only is True
+    # scalar cluster: the filter never engages (no vector accounting)
+    c = Cluster(ClusterConfig(autoscale=ClusterAutoscaleConfig(
+        policy="queue_depth", min_workers=4, max_workers=8)))
+    assert c.drf is None
+
+
+# ---------------------------------------------------------------------------
+# golden pin: the drf schedule, literally
+# ---------------------------------------------------------------------------
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "drf_trace.json"
+GOLDEN_RTOL = 1e-6
+
+
+def _drf_trace(res):
+    rep = res.report
+    return {
+        "jobs": [{k: j.summary()[k]
+                  for k in ("job_id", "tenant", "state", "started_at",
+                            "finished_at", "rounds")}
+                 for j in sorted(res.jobs, key=lambda j: j.job_id)],
+        "report": {
+            "vector_fairness_ratio": rep.vector_fairness_ratio,
+            "tenant_dominant_share": rep.tenant_dominant_share,
+            "makespan_s": rep.makespan_s,
+            "total_cost_usd": rep.total_cost_usd,
+        },
+    }
+
+
+def _assert_close(got, want, path=""):
+    assert type(got) is type(want) or (
+        isinstance(got, (int, float)) and isinstance(want, (int, float))), \
+        f"{path}: {type(got).__name__} != {type(want).__name__}"
+    if isinstance(want, dict):
+        assert set(got) == set(want), f"{path}: keys differ"
+        for k in want:
+            _assert_close(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert len(got) == len(want), f"{path}: length differs"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(g, w, f"{path}[{i}]")
+    elif isinstance(want, float):
+        assert got == pytest.approx(want, rel=GOLDEN_RTOL), \
+            f"{path}: {got} != {want}"
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+def test_golden_drf_trace_pinned(fair_runs):
+    """The drf run's whole schedule — which job started and finished at
+    which sim instant, and the fairness rollup — pinned literally.  A
+    drift here means the DRF dispatch order (or the share integrals)
+    moved, not just a float wobbled.  Re-pin after an INTENTIONAL
+    change:  PYTHONPATH=src python tests/test_drf.py"""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    _assert_close(_drf_trace(fair_runs["drf"]), golden, "trace")
+
+
+def _regen_golden():
+    probs = _make_problems()
+    doc = _drf_trace(_fair_run(probs, "drf"))
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"re-pinned drf golden trace -> {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    _regen_golden()
